@@ -1,0 +1,76 @@
+"""Kernel micro-benchmarks: wall time (interpret mode on CPU — structural
+only; real timing requires TPU) + analytic FLOPs and arithmetic intensity
+per kernel, vs the pure-jnp reference."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    jax.tree.leaves(fn(*args))[0].block_until_ready()      # warm-up / compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.tree.leaves(out)[0].block_until_ready()
+    return (time.time() - t0) / reps * 1e6
+
+
+def main():
+    rows = {}
+    key = jax.random.key(0)
+    # flash attention tile
+    B, H, K, S, E = 1, 8, 4, 1024, 64
+    q = jax.random.normal(key, (B, H, S, E), jnp.float32)
+    k = jax.random.normal(key, (B, K, S, E), jnp.float32)
+    v = jax.random.normal(key, (B, K, S, E), jnp.float32)
+    us_k = _time(lambda *a: ops.flash_attention(*a), q, k, v)
+    us_r = _time(lambda *a: ref.flash_attention_ref(*a), q, k, v)
+    flops = 2 * 2 * B * H * S * S * E
+    rows["flash_attention"] = {"us_kernel_interp": us_k, "us_ref": us_r,
+                               "gflops": flops / 1e9}
+    common.csv_row("kernel_flash_attention", us_k,
+                   f"ref_us={us_r:.0f};gflop={flops/1e9:.2f}")
+
+    B, H, K, T, E = 4, 16, 8, 4096, 128
+    q = jax.random.normal(key, (B, H, E), jnp.float32)
+    kk = jax.random.normal(key, (B, T, K, E), jnp.float32)
+    vv = jax.random.normal(key, (B, T, K, E), jnp.float32)
+    us_k = _time(lambda *a: ops.decode_attention(*a), q, kk, vv,
+                 jnp.int32(T))
+    bytes_moved = 2 * B * T * K * E * 4
+    rows["decode_attention"] = {"us_kernel_interp": us_k,
+                                "mb_kv": bytes_moved / 1e6}
+    common.csv_row("kernel_decode_attention", us_k,
+                   f"kv_mb={bytes_moved/1e6:.1f}")
+
+    B, Hh, NC, c, P, N = 1, 8, 16, 128, 64, 64
+    xb = jax.random.normal(key, (B, Hh, NC, c, P))
+    Bc = jax.random.normal(key, (B, NC, c, N))
+    Cc = jax.random.normal(key, (B, NC, c, N))
+    cum = -jnp.cumsum(jnp.abs(jax.random.normal(key, (B, Hh, NC, c))), -1) * .1
+    us_k = _time(lambda *a: ops.ssm_chunk_scan(*a), xb, Bc, Cc, cum)
+    rows["ssm_chunk_scan"] = {"us_kernel_interp": us_k}
+    common.csv_row("kernel_ssm_chunk_scan", us_k, f"chunks={NC}")
+
+    T, D, V = 512, 1024, 32768
+    h = jax.random.normal(key, (T, D))
+    nw = jnp.ones((D,))
+    W = jax.random.normal(key, (D, V)) * 0.02
+    us_k = _time(lambda *a: ops.early_exit_head(*a), h, nw, W)
+    saved = T * V * 4
+    rows["early_exit_head"] = {"us_kernel_interp": us_k,
+                               "hbm_saved_mb": saved / 1e6}
+    common.csv_row("kernel_early_exit_head", us_k,
+                   f"logits_hbm_saved_mb={saved/1e6:.0f}")
+    common.save("kernels", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

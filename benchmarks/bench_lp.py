@@ -1,0 +1,34 @@
+"""LP solver benchmark: HiGHS (oracle) vs JAX PDHG across instance sizes —
+objective parity and wall time (the PDHG path is the accelerator-native
+production solver; on CPU its advantage is jit-compiled batch windows)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from repro.core import lp as LP
+from repro.mec.scenario import MECConfig, Scenario
+
+
+def main():
+    rows = {}
+    for U in (100, 300, 600):
+        cfg = MECConfig(n_users=U, seed=2)
+        sc = Scenario(cfg)
+        inst = sc.instance(0, sc.empty_cache())
+        t0 = time.time()
+        _, _, obj_s = LP.solve_lp_scipy(inst)
+        t_s = time.time() - t0
+        t0 = time.time()
+        res = LP.solve_lp_pdhg(inst, iters=3000)
+        t_p = time.time() - t0
+        rows[U] = {"scipy_s": t_s, "pdhg_s": t_p, "scipy_obj": obj_s,
+                   "pdhg_obj": res.obj, "gap": abs(res.obj - obj_s) / obj_s}
+        common.csv_row(f"lp_U{U}", t_s * 1e6,
+                       f"pdhg_us={t_p*1e6:.0f};gap={rows[U]['gap']:.4f}")
+    common.save("lp_solvers", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Shared benchmark plumbing: paper-default scenario configs, scaling knobs,
+and result persistence."""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results" / "bench"
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+
+def paper_offline_cfg(**kw):
+    """Paper Sec. VII-A defaults (reduced unless REPRO_BENCH_FULL=1)."""
+    from repro.mec.scenario import MECConfig
+    base = dict(n_bs=5, n_users=600 if FULL else 300,
+                n_models=8, n_windows=10 if FULL else 6,
+                window_s=3.0, zipf=0.8, mem_capacity_mb=500.0,
+                compute_gflops=70.0, seed=0)
+    base.update(kw)
+    return MECConfig(**base)
+
+
+def paper_online_cfg(**kw):
+    from repro.core.online import OnlineConfig
+    base = dict(n_slots=100 if FULL else 60, slot_s=0.5, rounds=3,
+                dT_past=10, dT_future=5, alpha=0.9, gamma=0.9)
+    base.update(kw)
+    return OnlineConfig(**base)
+
+
+def save(name: str, payload):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / f"{name}.json"
+    path.write_text(json.dumps(payload, indent=1, default=float))
+    return path
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, time.time() - t0
+
+
+def csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

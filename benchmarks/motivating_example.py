@@ -1,0 +1,68 @@
+"""Paper Sec. III motivating example: static (complete models) vs. dynamic
+(submodel switching) caching at one BS over two observation windows.
+
+Uses the paper's own metric definitions:
+  P_avg = Σ_h ⌊u_h/|τ| · (|τ| − l_h)⌋ · p_h / U_total
+  H_avg = Σ_h ⌊u_h/|τ| · (|τ| − l_h)⌋ / U_total
+"""
+from __future__ import annotations
+
+import math
+
+from repro.configs.vit_edge import MOTIVATING
+
+WINDOW = 5.0
+CAP_GB = 2.0
+
+
+def _served(users, load_s):
+    return math.floor(users / WINDOW * (WINDOW - load_s))
+
+
+def run_example():
+    A, B = MOTIVATING["A"], MOTIVATING["B"]
+    demand = [(60, 40), (20, 80)]              # (A, B) users per window
+    total = sum(a + b for a, b in demand)
+
+    # ---- static: complete models only ------------------------------------
+    sP = sH = 0.0
+    # w1: cache full A (both full models exceed 2 GB); B dropped
+    n = _served(demand[0][0], A[2]["load_s"])
+    sP += n * A[2]["precision"]
+    sH += n
+    # w2: evict A, cold-load full B
+    n = _served(demand[1][1], B[2]["load_s"])
+    sP += n * B[2]["precision"]
+    sH += n
+    static = {"avg_precision": sP / total, "hit_rate": sH / total}
+
+    # ---- dynamic: submodel switching --------------------------------------
+    dP = dH = 0.0
+    # w1: A sub2 + B sub2 (0.8 + 1.0 GB <= 2 GB)
+    for users, sub in ((demand[0][0], A[1]), (demand[0][1], B[1])):
+        n = _served(users, sub["load_s"])
+        dP += n * sub["precision"]
+        dH += n
+    # w2: upgrade B 2->3 (Δ-switch), downgrade A 2->1 (cheap prune)
+    n = _served(demand[1][1], MOTIVATING["switch_B2_to_B3_s"])
+    dP += n * B[2]["precision"]
+    dH += n
+    n = _served(demand[1][0], A[0]["load_s"])
+    dP += n * A[0]["precision"]
+    dH += n
+    dynamic = {"avg_precision": dP / total, "hit_rate": dH / total}
+    return static, dynamic
+
+
+def main():
+    static, dynamic = run_example()
+    print(f"static : P_avg={static['avg_precision']:.3f} "
+          f"H_avg={static['hit_rate']:.3f}")
+    print(f"dynamic: P_avg={dynamic['avg_precision']:.3f} "
+          f"H_avg={dynamic['hit_rate']:.3f}")
+    print("paper reports 0.51 vs 0.87 precision (dynamic wins by +0.36)")
+    return static, dynamic
+
+
+if __name__ == "__main__":
+    main()

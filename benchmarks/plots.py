@@ -1,0 +1,116 @@
+"""Render the paper's figures from saved benchmark JSONs -> results/plots/.
+
+  PYTHONPATH=src python -m benchmarks.plots
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import matplotlib
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt  # noqa: E402
+
+from benchmarks.common import RESULTS  # noqa: E402
+
+PLOTS = RESULTS.parent / "plots"
+
+STYLE = {"cocar": ("CoCaR", "o-"), "cocar-ol": ("CoCaR-OL", "o-"),
+         "greedy": ("Greedy", "s--"), "spr3": ("SPR³", "^--"),
+         "random": ("Random", "x:"), "lfu": ("LFU", "v--"),
+         "lfu-mad": ("LFU-MAD", "d--"), "gatmarl": ("GatMARL", "*--"),
+         "lr": ("LR", "k-.")}
+
+
+def _sweep_plot(name, metric, xlabel, ylabel, title, fname):
+    path = RESULTS / f"{name}.json"
+    if not path.exists():
+        return None
+    data = json.loads(path.read_text())
+    fig, ax = plt.subplots(figsize=(5, 3.4))
+    algos = sorted({a for v in data.values() for a in v})
+    for a in algos:
+        xs, ys = [], []
+        for x, block in sorted(data.items(), key=lambda kv: float(kv[0])):
+            if a in block and metric in block[a]:
+                xs.append(float(x))
+                ys.append(block[a][metric])
+        if xs:
+            label, fmt = STYLE.get(a, (a, "-"))
+            ax.plot(xs, ys, fmt, label=label, markersize=4)
+    ax.set_xlabel(xlabel)
+    ax.set_ylabel(ylabel)
+    ax.set_title(title, fontsize=10)
+    ax.grid(alpha=0.3)
+    ax.legend(fontsize=7)
+    fig.tight_layout()
+    out = PLOTS / fname
+    fig.savefig(out, dpi=130)
+    plt.close(fig)
+    return out
+
+
+def roofline_plot(mesh="16x16"):
+    md = RESULTS.parent / f"roofline_{mesh}.md"
+    if not md.exists():
+        return None
+    rows = []
+    for line in md.read_text().splitlines()[2:]:
+        cells = [c.strip() for c in line.strip("|").split("|")]
+        if len(cells) < 8 or cells[2] == "—":
+            continue
+        rows.append((f"{cells[0]}\n{cells[1]}", float(cells[2]),
+                     float(cells[3]), float(cells[4])))
+    rows.sort(key=lambda r: -(r[1] + r[2] + r[3]))
+    rows = rows[:14]
+    fig, ax = plt.subplots(figsize=(9, 4))
+    xs = range(len(rows))
+    ax.bar(xs, [r[1] for r in rows], label="compute", color="#4c72b0")
+    ax.bar(xs, [r[2] for r in rows], bottom=[r[1] for r in rows],
+           label="memory", color="#dd8452")
+    ax.bar(xs, [r[3] for r in rows],
+           bottom=[r[1] + r[2] for r in rows], label="collective",
+           color="#55a868")
+    ax.set_xticks(list(xs))
+    ax.set_xticklabels([r[0] for r in rows], fontsize=6, rotation=45,
+                       ha="right")
+    ax.set_ylabel("roofline terms (s/step/device)")
+    ax.set_title(f"Roofline terms per cell — {mesh}", fontsize=10)
+    ax.legend(fontsize=8)
+    fig.tight_layout()
+    out = PLOTS / f"roofline_{mesh}.png"
+    fig.savefig(out, dpi=130)
+    plt.close(fig)
+    return out
+
+
+def main():
+    PLOTS.mkdir(parents=True, exist_ok=True)
+    made = [
+        _sweep_plot("fig6_memory", "avg_precision", "BS memory (MB)",
+                    "avg precision", "Fig 6a — memory capacity (offline)",
+                    "fig6_precision.png"),
+        _sweep_plot("fig6_memory", "hit_rate", "BS memory (MB)", "hit rate",
+                    "Fig 6b — memory capacity (offline)", "fig6_hitrate.png"),
+        _sweep_plot("fig8_zipf", "avg_precision", "Zipf skewness",
+                    "avg precision", "Fig 8a — Zipf skew (offline)",
+                    "fig8_precision.png"),
+        _sweep_plot("fig12_memory_online", "avg_qoe", "BS memory (MB)",
+                    "avg QoE", "Fig 12a — memory capacity (online)",
+                    "fig12_qoe.png"),
+        _sweep_plot("fig13_popfreq_online", "avg_qoe",
+                    "popularity change period (slots)", "avg QoE",
+                    "Fig 13a — popularity change (online)", "fig13_qoe.png"),
+        _sweep_plot("fig14_zipf_online", "avg_qoe", "Zipf skewness",
+                    "avg QoE", "Fig 14a — Zipf skew (online)",
+                    "fig14_qoe.png"),
+        roofline_plot("16x16"),
+        roofline_plot("2x16x16"),
+    ]
+    for m in made:
+        if m:
+            print("wrote", m)
+
+
+if __name__ == "__main__":
+    main()

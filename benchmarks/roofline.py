@@ -1,0 +1,99 @@
+"""Roofline analysis (§Roofline): three terms per (arch × shape × mesh)
+derived from the compiled dry-run artifacts under results/dryrun/.
+
+  compute    = HLO_FLOPs(loop-aware) / peak_FLOP/s      (per chip)
+  memory     = HLO_bytes(traffic proxy) / HBM_bw        (per chip)
+  collective = collective_bytes / link_bw               (per chip)
+
+plus MODEL_FLOPS = 6·N·D (train) / 2·N_active·D (serve) and the
+MODEL/HLO ratio (remat + padding + dispatch waste), and the roofline
+fraction = compute / max(all three) — the §Perf score.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks import common
+from repro import configs
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.specs import SHAPES
+from repro.models import partition
+
+DRYRUN = pathlib.Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def analyse_cell(rec: dict) -> dict:
+    arch, shape = rec["arch"], rec["shape"]
+    cfg = configs.get_config(arch)
+    seq, batch, mode = SHAPES[shape]
+    flops = rec.get("flops_per_device") or 0.0
+    hbm = rec.get("hbm_bytes_per_device") or 0.0
+    coll = rec.get("collective_bytes_per_device") or 0.0
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+
+    t_c = flops / PEAK_FLOPS_BF16
+    t_m = hbm / HBM_BW
+    t_x = coll / ICI_BW
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x}
+    dominant = max(terms, key=terms.get)
+    model_flops = partition.model_flops(cfg, batch, seq, mode) / chips
+    return {
+        "arch": arch, "shape": shape, "mesh": rec["mesh"], "mode": mode,
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops_per_chip": model_flops,
+        "model_over_hlo": round(model_flops / flops, 3) if flops else None,
+        "roofline_fraction": round(t_c / max(t_c, t_m, t_x), 4)
+        if max(t_c, t_m, t_x) > 0 else None,
+        "peak_bytes_per_device": rec.get("peak_bytes_per_device"),
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+def load_cells(mesh="16x16"):
+    rows = []
+    d = DRYRUN / mesh
+    if not d.exists():
+        return rows
+    for p in sorted(d.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("ok"):
+            rows.append(analyse_cell(rec))
+        elif rec.get("skipped"):
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": mesh, "skipped": rec["skipped"]})
+    return rows
+
+
+def markdown_table(rows):
+    hdr = ("| arch | shape | compute s | memory s | coll s | dominant | "
+           "MODEL/HLO | roofline frac |")
+    sep = "|" + "---|" * 8
+    lines = [hdr, sep]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant']} | {r['model_over_hlo']} | "
+            f"{r['roofline_fraction']} |")
+    return "\n".join(lines)
+
+
+def main(mesh="16x16"):
+    rows = load_cells(mesh)
+    common.save(f"roofline_{mesh}", rows)
+    md = markdown_table(rows)
+    out = DRYRUN.parent / f"roofline_{mesh}.md"
+    out.write_text(md + "\n")
+    print(md)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else "16x16")

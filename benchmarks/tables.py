@@ -1,0 +1,117 @@
+"""Paper tables & figures as benchmark functions (Table IV/V, Figs 6-9,
+12-14).  Each returns a dict and persists JSON under results/bench/."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.cocar import run_offline
+from repro.core.online import run_online
+
+OFFLINE_ALGOS = ("lr", "cocar", "gatmarl", "greedy", "spr3", "random")
+ONLINE_ALGOS = ("cocar-ol", "lfu-mad", "lfu", "random")
+
+
+def table4_offline(algos=OFFLINE_ALGOS, **cfg_kw):
+    cfg = common.paper_offline_cfg(**cfg_kw)
+    out = {}
+    for a in algos:
+        res, secs = common.timed(run_offline, cfg, a)
+        res["seconds"] = round(secs, 2)
+        out[a] = res
+    common.save("table4_offline", out)
+    return out
+
+
+def table5_online(algos=ONLINE_ALGOS, **cfg_kw):
+    cfg = common.paper_offline_cfg(**cfg_kw)
+    out = {}
+    for part in (True, False):
+        ocfg = common.paper_online_cfg(partition=part)
+        key = "w_partition" if part else "wo_partition"
+        out[key] = {}
+        for a in algos:
+            res, secs = common.timed(run_online, cfg, ocfg, a)
+            res["seconds"] = round(secs, 2)
+            out[key][a] = res
+    common.save("table5_online", out)
+    return out
+
+
+def fig6_memory(caps=(100, 200, 300, 400, 500),
+                algos=("cocar", "greedy", "spr3", "random")):
+    out = {}
+    for cap in caps:
+        cfg = common.paper_offline_cfg(mem_capacity_mb=float(cap))
+        out[cap] = {a: run_offline(cfg, a) for a in algos}
+    common.save("fig6_memory", out)
+    return out
+
+
+def fig7_popularity(change_every=(1, 2, 5, 10),
+                    algos=("cocar", "greedy", "spr3", "random")):
+    out = {}
+    for ce in change_every:
+        cfg = common.paper_offline_cfg(
+            popularity_change_every=ce,
+            n_windows=20 if common.FULL else 10)
+        out[ce] = {a: run_offline(cfg, a) for a in algos}
+    common.save("fig7_popularity", out)
+    return out
+
+
+def fig8_zipf(zipfs=(0.0, 0.2, 0.4, 0.6, 0.8, 1.0),
+              algos=("cocar", "greedy", "spr3", "random")):
+    out = {}
+    for z in zipfs:
+        cfg = common.paper_offline_cfg(zipf=z)
+        out[z] = {a: run_offline(cfg, a) for a in algos}
+    common.save("fig8_zipf", out)
+    return out
+
+
+def fig9_window(durations=(1.0, 2.0, 3.0, 4.0, 5.0),
+                algos=("cocar", "spr3", "greedy")):
+    """Total time fixed at 30 s: |Γ| = 30/Δτ windows, U = 200·Δτ users."""
+    out = {}
+    total_s, users_per_s = 30.0, 200 if common.FULL else 100
+    for d in durations:
+        cfg = common.paper_offline_cfg(
+            window_s=d, n_windows=int(total_s / d),
+            n_users=int(users_per_s * d))
+        out[d] = {a: run_offline(cfg, a) for a in algos}
+    common.save("fig9_window", out)
+    return out
+
+
+def fig12_memory_online(caps=(100, 300, 500, 700, 900),
+                        algos=("cocar-ol", "lfu-mad", "lfu", "random")):
+    out = {}
+    for cap in caps:
+        cfg = common.paper_offline_cfg(mem_capacity_mb=float(cap))
+        ocfg = common.paper_online_cfg()
+        out[cap] = {a: run_online(cfg, ocfg, a) for a in algos}
+    common.save("fig12_memory_online", out)
+    return out
+
+
+def fig13_popfreq_online(change_every=(10, 20, 50, 100),
+                         algos=("cocar-ol", "lfu-mad", "lfu", "random")):
+    out = {}
+    for ce in change_every:
+        cfg = common.paper_offline_cfg()
+        ocfg = common.paper_online_cfg(pop_change_every=ce)
+        out[ce] = {a: run_online(cfg, ocfg, a) for a in algos}
+    common.save("fig13_popfreq_online", out)
+    return out
+
+
+def fig14_zipf_online(zipfs=(0.0, 0.4, 0.8),
+                      algos=("cocar-ol", "lfu-mad", "lfu", "random")):
+    out = {}
+    for z in zipfs:
+        cfg = common.paper_offline_cfg(zipf=z)
+        ocfg = common.paper_online_cfg()
+        out[z] = {a: run_online(cfg, ocfg, a) for a in algos}
+    common.save("fig14_zipf_online", out)
+    return out

@@ -1,0 +1,46 @@
+"""Quickstart: the paper's pipeline in one page.
+
+1. Take a real architecture, disassemble it into dynamic-DNN submodels.
+2. Build a MEC scenario (paper Sec. VII-A settings, reduced).
+3. Run CoCaR for one observation window (LP -> rounding -> repair).
+4. Inspect the caching/routing decisions and metrics.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro import configs
+from repro.core.cocar import cocar_window
+from repro.core.jdcr import check_feasible
+from repro.mec import metrics as MET
+from repro.mec.scenario import MECConfig, Scenario
+from repro.models import partition
+
+# -- 1. dynamic-DNN partitioning of a real architecture ----------------------
+cfg = configs.get_config("qwen1.5-0.5b")
+print(f"{cfg.name}: {cfg.n_layers} layers, exits at {cfg.exit_layers}")
+for j, entry in enumerate(partition.catalog_entry(cfg)):
+    print(f"  submodel h{j+1}: {entry['r_h']/1e9:6.2f} GB "
+          f"(Δ download {entry['delta_r']/1e9:5.2f} GB), "
+          f"{entry['c_h']/1e9:6.2f} GFLOP/token")
+
+# -- 2. MEC scenario ----------------------------------------------------------
+mec = MECConfig(n_bs=5, n_users=300, n_models=8, seed=0)
+sc = Scenario(mec)
+inst = sc.instance(0, sc.empty_cache())
+print(f"\nMEC: {inst.N} BSs, {inst.U} users, {inst.M} model types x "
+      f"{inst.H} submodels, R={mec.mem_capacity_mb:.0f} MB")
+
+# -- 3. CoCaR ------------------------------------------------------------------
+x, A, info = cocar_window(inst, seed=0)
+print(f"\nLP optimum: {info['lp_obj']:.1f} total precision")
+print("feasible after rounding+repair:", check_feasible(inst, x, A)["ok"])
+
+# -- 4. decisions & metrics ----------------------------------------------------
+for n in range(inst.N):
+    cached = [f"m{m}:h{np.argmax(x[n, m])}" for m in range(inst.M)
+              if np.argmax(x[n, m]) > 0]
+    print(f"  BS{n}: {', '.join(cached) or '(empty)'}")
+m = MET.window_metrics(inst, x, A)
+print(f"\navg precision {m['avg_precision']:.3f}  hit rate "
+      f"{m['hit_rate']:.3f}  memory util {m['mem_util']:.3f}")

@@ -1,0 +1,46 @@
+"""Ad-hoc: forward every smoke config (train + prefill + decode)."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import model as M
+from repro.models.config import build_plan
+from repro.models import partition
+
+B, S = 2, 32
+
+for arch in configs.ARCH_IDS:
+    cfg = configs.get_smoke(arch)
+    plan = build_plan(cfg)
+    key = jax.random.key(0)
+    params = M.init(cfg, key)
+    npar = partition.submodel_param_count(cfg)
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["tokens"] = batch["tokens"][:, : S - cfg.frontend_len]
+        batch["patches"] = jax.random.normal(key, (B, cfg.frontend_len, cfg.d_model))
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(key, (B, cfg.encoder_len, cfg.d_model))
+    logits, aux = M.apply_train(cfg, params, batch, plan)
+    assert len(logits) == cfg.n_exits, (arch, len(logits))
+    for lg in logits:
+        assert lg.shape == (B, S, cfg.padded_vocab), (arch, lg.shape)
+        assert not np.any(np.isnan(lg)), f"{arch}: NaN in train logits"
+
+    cache = M.cache_init(cfg, B, S, plan)
+    lg, cache = M.prefill(cfg, params, batch, cache, exit_idx=-1, plan=plan)
+    assert lg.shape == (B, cfg.padded_vocab)
+    assert not np.any(np.isnan(lg)), f"{arch}: NaN in prefill logits"
+
+    tok = jnp.zeros((B, 1), jnp.int32)
+    lg2, cache = M.decode(cfg, params, tok, jnp.int32(S), cache, plan=plan)
+    assert lg2.shape == (B, cfg.padded_vocab)
+    assert not np.any(np.isnan(lg2)), f"{arch}: NaN in decode logits"
+
+    print(f"OK {arch:16s} params={npar:>10,} segs={len(plan.segments)} "
+          f"exits={plan.exit_after}")
+
+print("zoo smoke OK")

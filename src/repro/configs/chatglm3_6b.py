@@ -1,0 +1,21 @@
+"""chatglm3-6b — dense, 2D-RoPE (rotary on half the head dims), GQA kv=2
+[arXiv:2406.12793].
+
+28L, d_model 4096, 32 heads (GQA kv=2), d_ff 13696, vocab 65024.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    train_microbatches=2,
+    name="chatglm3-6b", family="dense",
+    n_layers=28, d_model=4096, n_heads=32, n_kv_heads=2, d_ff=13696,
+    vocab_size=65024, head_dim=128, rope_variant="half",
+)
+
+SMOKE = ModelConfig(
+    name="chatglm3-smoke", family="dense",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=512, head_dim=16, rope_variant="half",
+    exit_layers=(2, 3, 4), dtype="float32", param_dtype="float32", remat=False,
+    vocab_pad_multiple=16,
+)

@@ -1,0 +1,26 @@
+"""pixtral-12b — VLM: stub pixtral-ViT frontend + mistral-nemo-style decoder
+[hf:mistralai/Pixtral-12B-2409].
+
+40L, d_model 5120, 32 heads (GQA kv=8, head_dim 128), d_ff 14336,
+vocab 131072.  The vision frontend is a STUB: ``input_specs`` supplies
+precomputed patch embeddings (B, frontend_len, d_model), merged before the
+text tokens (prefix-causal).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    train_microbatches=4,
+    name="pixtral-12b", family="vlm",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8, d_ff=14336,
+    vocab_size=131072, head_dim=128, rope_theta=1e6,
+    frontend="patch", frontend_len=256,
+)
+
+SMOKE = ModelConfig(
+    name="pixtral-smoke", family="vlm",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=512, head_dim=16,
+    frontend="patch", frontend_len=8,
+    exit_layers=(2, 3, 4), dtype="float32", param_dtype="float32", remat=False,
+    vocab_pad_multiple=16,
+)

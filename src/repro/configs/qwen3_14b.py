@@ -1,0 +1,28 @@
+"""qwen3-14b — dense GQA with qk-norm [hf:Qwen/Qwen3-14B family].
+
+40L, d_model 5120, 40 heads (GQA kv=8, head_dim 128), d_ff 17408,
+vocab 151936.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    train_microbatches=4,
+    name="qwen3-14b", family="dense",
+    n_layers=40, d_model=5120, n_heads=40, n_kv_heads=8, d_ff=17408,
+    vocab_size=151936, head_dim=128, qk_norm=True, rope_theta=1e6,
+    # §Perf: 40 heads don't divide the 16-way model axis — pad to 48
+    # zero-weight heads (outputs identical) so attention shards over TP
+    q_head_pad=48,
+    # seq_parallel=True was tried and REFUTED (EXPERIMENTS.md §Perf iter 3):
+    # GSPMD reshards around the blocked-attention scan instead of emitting
+    # reduce-scatter/all-gather, inflating collectives 8.5x
+
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-smoke", family="dense",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=512, head_dim=16, qk_norm=True,
+    exit_layers=(2, 3, 4), dtype="float32", param_dtype="float32", remat=False,
+    vocab_pad_multiple=16,
+)

@@ -1,0 +1,20 @@
+"""stablelm-12b — dense GQA [hf:stabilityai/stablelm-2-12b family].
+
+40L, d_model 5120, 32 heads (GQA kv=8), d_ff 13824, vocab 100352.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    train_microbatches=4,
+    name="stablelm-12b", family="dense",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8, d_ff=13824,
+    vocab_size=100352, head_dim=160,
+)
+
+SMOKE = ModelConfig(
+    name="stablelm-smoke", family="dense",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=512, head_dim=16,
+    exit_layers=(2, 3, 4), dtype="float32", param_dtype="float32", remat=False,
+    vocab_pad_multiple=16,
+)

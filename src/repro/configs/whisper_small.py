@@ -1,0 +1,26 @@
+"""whisper-small — encoder-decoder with stub audio conv frontend
+[arXiv:2212.04356].
+
+12 encoder + 12 decoder layers, d_model 768, 12 heads (MHA), d_ff 3072,
+vocab 51865.  The conv frontend is a STUB: ``input_specs`` supplies
+precomputed post-conv frame embeddings (B, encoder_len, d_model).
+Positional encoding is sinusoidal (paper uses learned for the decoder —
+noted deviation, irrelevant to system behaviour).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small", family="encdec",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, d_ff=3072,
+    vocab_size=51865, head_dim=64, rope_variant="none",
+    encoder_layers=12, encoder_len=1500, frontend="audio",
+)
+
+SMOKE = ModelConfig(
+    name="whisper-smoke", family="encdec",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+    vocab_size=512, head_dim=16, rope_variant="none",
+    encoder_layers=2, encoder_len=16, frontend="audio",
+    exit_layers=(2, 3, 4), dtype="float32", param_dtype="float32", remat=False,
+    vocab_pad_multiple=16,
+)

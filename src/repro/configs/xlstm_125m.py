@@ -1,0 +1,24 @@
+"""xlstm-125m — sLSTM + mLSTM blocks [arXiv:2405.04517].
+
+12 blocks, d_model 768, 4 heads (head_dim 192), vocab 50304; no separate FFN
+(d_ff=0 — xLSTM blocks carry their own projections).  sLSTM at blocks {3, 9},
+mLSTM elsewhere (≈ the paper's [7:1]-style mostly-mLSTM mix).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    train_microbatches=2,
+    name="xlstm-125m", family="xlstm",
+    n_layers=12, d_model=768, n_heads=4, n_kv_heads=4, d_ff=0,
+    vocab_size=50304, head_dim=192, rope_variant="none",
+    slstm_at=(3, 9), ssm_chunk=128,
+)
+
+SMOKE = ModelConfig(
+    name="xlstm-smoke", family="xlstm",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=4, d_ff=0,
+    vocab_size=512, head_dim=16, rope_variant="none",
+    slstm_at=(1,), ssm_chunk=16,
+    exit_layers=(2, 3, 4), dtype="float32", param_dtype="float32", remat=False,
+    vocab_pad_multiple=16,
+)

@@ -1,0 +1,23 @@
+"""zamba2-1.2b — hybrid Mamba2 + shared attention blocks [arXiv:2411.15242].
+
+38 Mamba2 layers, d_model 2048, a single shared attention+MLP block applied
+every 6 Mamba layers (weights reused), ssm_state 64.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    train_microbatches=2,
+    name="zamba2-1.2b", family="hybrid_mamba",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=8192,
+    vocab_size=32000, head_dim=64,
+    ssm_state=64, ssm_head_dim=64, ssm_expand=2, ssm_chunk=128, attn_every=6,
+)
+
+SMOKE = ModelConfig(
+    name="zamba2-smoke", family="hybrid_mamba",
+    n_layers=6, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+    vocab_size=512, head_dim=16,
+    ssm_state=16, ssm_head_dim=16, ssm_expand=2, ssm_chunk=16, attn_every=2,
+    exit_layers=(2, 4, 6), dtype="float32", param_dtype="float32", remat=False,
+    vocab_pad_multiple=16,
+)

@@ -1,0 +1,250 @@
+"""Offline baselines (paper Sec. VII-B).
+
+* SPR³  [22] — random-rounding joint caching/routing, but complete models
+  only (no dynamic submodels) and loading time ignored in decisions.
+* Greedy — popularity-ordered caching, highest precision first, home-BS
+  routing only.
+* Random — random submodel choices under memory + random routing.
+* GatMARL [55] — compact graph-attention multi-agent RL: a 2-layer GAT over
+  the BS graph encodes per-BS demand; per-BS policy heads pick a submodel
+  per model type; trained with REINFORCE on average served precision.
+  (Loading time ignored in decisions, as in the paper's comparison.)
+
+All baselines are *evaluated* under the same feasibility enforcement as
+CoCaR (mec.metrics.enforce).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.jdcr import JDCRInstance
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _route_home(inst: JDCRInstance, x):
+    """Route every user to its home BS if the model is cached there."""
+    A = np.zeros((inst.N, inst.U, inst.H))
+    for u in range(inst.U):
+        n = inst.home[u]
+        h = int(np.argmax(x[n, inst.m_u[u]]))
+        if h > 0:
+            A[n, u, h - 1] = 1.0
+    return A
+
+
+def _route_best(inst: JDCRInstance, x, rng=None, random_route=False):
+    """Route to a BS caching m_u (random or best precision), else cloud."""
+    A = np.zeros((inst.N, inst.U, inst.H))
+    cached_h = np.argmax(x, axis=-1)                     # (N, M)
+    for u in range(inst.U):
+        m = inst.m_u[u]
+        options = [(n, cached_h[n, m]) for n in range(inst.N)
+                   if cached_h[n, m] > 0]
+        if not options:
+            continue
+        if random_route:
+            n, h = options[rng.integers(len(options))]
+        else:
+            n, h = max(options, key=lambda nh: inst.prec[m, nh[1]])
+        A[n, u, h - 1] = 1.0
+    return A
+
+
+# ---------------------------------------------------------------------------
+# Greedy
+# ---------------------------------------------------------------------------
+
+def greedy(inst: JDCRInstance):
+    counts = np.bincount(inst.m_u, minlength=inst.M)
+    order = np.argsort(-counts)
+    x = np.zeros((inst.N, inst.M, inst.H + 1))
+    x[:, :, 0] = 1.0
+    for n in range(inst.N):
+        free = inst.R[n]
+        for m in order:
+            for h in range(inst.H, 0, -1):               # high precision first
+                if inst.sizes[m, h] <= free:
+                    x[n, m, :] = 0
+                    x[n, m, h] = 1
+                    free -= inst.sizes[m, h]
+                    break
+    return x, _route_home(inst, x)
+
+
+# ---------------------------------------------------------------------------
+# Random
+# ---------------------------------------------------------------------------
+
+def random_policy(inst: JDCRInstance, seed=0):
+    rng = np.random.default_rng(seed)
+    x = np.zeros((inst.N, inst.M, inst.H + 1))
+    x[:, :, 0] = 1.0
+    for n in range(inst.N):
+        free = inst.R[n]
+        for m in rng.permutation(inst.M):
+            h = rng.integers(0, inst.H + 1)
+            if h > 0 and inst.sizes[m, h] <= free:
+                x[n, m, :] = 0
+                x[n, m, h] = 1
+                free -= inst.sizes[m, h]
+    # paper: "user requests are randomly routed to a BS" — any BS; it is a
+    # miss if that BS does not cache the model
+    A = np.zeros((inst.N, inst.U, inst.H))
+    cached_h = np.argmax(x, axis=-1)
+    for u in range(inst.U):
+        n = rng.integers(inst.N)
+        h = cached_h[n, inst.m_u[u]]
+        if h > 0:
+            A[n, u, h - 1] = 1.0
+    return x, A
+
+
+# ---------------------------------------------------------------------------
+# SPR³ — complete models only, loading time ignored
+# ---------------------------------------------------------------------------
+
+def spr3(inst: JDCRInstance, seed=0):
+    import dataclasses
+
+    from repro.core import lp as LP
+    from repro.core.rounding import repair, round_solution
+
+    # complete-model variant: shrink the catalog to {h0, hH} by making the
+    # intermediate submodels as large as the full model (the LP then never
+    # prefers them) and neutralize the load constraint (s_u = window end).
+    sizes = inst.sizes.copy()
+    prec = inst.prec.copy()
+    for m in range(inst.M):
+        for h in range(1, inst.H):
+            sizes[m, h] = sizes[m, inst.H]
+            prec[m, h] = 0.0
+    relaxed = dataclasses.replace(
+        inst, sizes=sizes, prec=prec,
+        s_u=np.full(inst.U, 1e9))                        # ignore load time
+    x_f, A_f, _ = LP.solve_lp_scipy(relaxed)
+    x_i, A_i = round_solution(relaxed, x_f, A_f, seed)
+    x, A = repair(relaxed, x_i, A_i)
+    return x, A
+
+
+# ---------------------------------------------------------------------------
+# GatMARL-lite: GAT over the BS graph + REINFORCE
+# ---------------------------------------------------------------------------
+
+def _gat_forward(params, feats, adj):
+    """One graph-attention layer + policy logits.
+
+    feats: (N, F); adj: (N, N) with self-loops. Returns (N, M, H+1) logits."""
+    import jax.numpy as jnp
+
+    h = jnp.tanh(feats @ params["w_in"])                     # (N, d)
+    att_src = h @ params["a_src"]                            # (N,)
+    att_dst = h @ params["a_dst"]
+    scores = att_src[:, None] + att_dst[None, :]
+    scores = jnp.where(adj > 0, scores, -1e9)
+    alpha = jnp.exp(scores - scores.max(1, keepdims=True))
+    alpha = alpha * (adj > 0)
+    alpha = alpha / jnp.maximum(alpha.sum(1, keepdims=True), 1e-9)
+    h2 = jnp.tanh(alpha @ h @ params["w_msg"] + h)
+    return (h2 @ params["w_out"]).reshape(h.shape[0], -1)
+
+
+_GAT_CACHE = {}
+
+
+def _train_gatmarl(inst: JDCRInstance, seed: int, episodes: int = 150):
+    import jax
+    import jax.numpy as jnp
+
+    N, M, H = inst.N, inst.M, inst.H
+    d = 32
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    params = {
+        "w_in": jax.random.normal(ks[0], (M + 1, d)) * 0.3,
+        "a_src": jax.random.normal(ks[1], (d,)) * 0.3,
+        "a_dst": jax.random.normal(ks[2], (d,)) * 0.3,
+        "w_msg": jax.random.normal(ks[3], (d, d)) * 0.3,
+        "w_out": jax.random.normal(ks[4], (d, M * (H + 1))) * 0.3,
+    }
+    adj = np.asarray(inst.wired < 1e11, dtype=np.float64)
+    np.fill_diagonal(adj, 1.0)
+    adj = jnp.asarray(adj)
+
+    def feats_of(m_u, home):
+        f = np.zeros((N, M + 1))
+        for u in range(len(m_u)):
+            f[home[u], m_u[u]] += 1.0
+        f[:, M] = inst.R / inst.R.max()
+        f[:, :M] /= max(len(m_u) / N, 1)
+        return jnp.asarray(f)
+
+    def reward_of(actions, inst):
+        x = np.zeros((N, M, H + 1))
+        for n in range(N):
+            free = inst.R[n]
+            for m in range(M):
+                h = int(actions[n, m])
+                if h > 0 and inst.sizes[m, h] <= free:
+                    x[n, m, h] = 1
+                    free -= inst.sizes[m, h]
+                else:
+                    x[n, m, 0] = 1
+        A = _route_best(inst, x)
+        from repro.mec import metrics as MET
+        return MET.window_metrics(inst, x, A)["avg_precision"], x, A
+
+    feats = feats_of(inst.m_u, inst.home)
+    lr = 0.05
+    baseline = 0.0
+
+    def logp_of(p, actions):
+        lg = _gat_forward(p, feats, adj).reshape(N, M, H + 1)
+        logp = jax.nn.log_softmax(lg, axis=-1)
+        return jnp.take_along_axis(logp, actions[..., None], -1).sum()
+
+    grad_fn = jax.jit(jax.grad(logp_of))
+    for ep in range(episodes):
+        key, k1 = jax.random.split(key)
+        lg = _gat_forward(params, feats, adj).reshape(N, M, H + 1)
+        a = jax.random.categorical(k1, lg, axis=-1)          # (N, M)
+        r, _, _ = reward_of(np.asarray(a), inst)
+        adv = r - baseline
+        baseline = 0.9 * baseline + 0.1 * r
+        grads = grad_fn(params, a)
+        params = jax.tree.map(lambda p, g: p + lr * adv * g, params, grads)
+    return params, feats, adj
+
+
+def gatmarl(inst: JDCRInstance, seed=0, episodes: int = 150):
+    import jax
+    import jax.numpy as jnp
+
+    cache_key = (inst.N, inst.M, inst.H, seed)
+    if cache_key not in _GAT_CACHE:
+        _GAT_CACHE[cache_key] = _train_gatmarl(inst, seed, episodes)
+    params, _, adj = _GAT_CACHE[cache_key]
+    # greedy (argmax) rollout on the current window's features
+    N, M, H = inst.N, inst.M, inst.H
+    f = np.zeros((N, M + 1))
+    for u in range(inst.U):
+        f[inst.home[u], inst.m_u[u]] += 1.0
+    f[:, M] = inst.R / inst.R.max()
+    f[:, :M] /= max(inst.U / N, 1)
+    logits = _gat_forward(params, jnp.asarray(f), adj).reshape(N, M, H + 1)
+    actions = np.asarray(jnp.argmax(logits, -1))
+    x = np.zeros((N, M, H + 1))
+    for n in range(N):
+        free = inst.R[n]
+        for m in range(M):
+            h = int(actions[n, m])
+            if h > 0 and inst.sizes[m, h] <= free:
+                x[n, m, h] = 1
+                free -= inst.sizes[m, h]
+            else:
+                x[n, m, 0] = 1
+    A = _route_best(inst, x)
+    return x, A

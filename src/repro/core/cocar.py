@@ -1,0 +1,80 @@
+"""CoCaR — the offline algorithm (paper Alg. 1 + Sec. V-D) and the
+window-by-window offline driver.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import lp as LP
+from repro.core.jdcr import JDCRInstance
+from repro.core.rounding import repair, round_solution
+from repro.mec import metrics as MET
+from repro.mec.scenario import MECConfig, Scenario
+
+
+def cocar_window(inst: JDCRInstance, seed: int = 0, solver: str = "scipy",
+                 pdhg_iters: int = 4000, best_of: int = 8):
+    """One observation window: LP -> randomized rounding -> repair.
+
+    ``best_of`` draws Alg. 1 independently and keeps the feasible solution
+    with the highest objective — every draw satisfies Thm 1's guarantee, so
+    the max only tightens it (and cuts the repair losses from unlucky
+    memory-overflow draws; draws are microseconds next to the LP solve)."""
+    if solver == "pdhg":
+        res = LP.solve_lp_pdhg(inst, iters=pdhg_iters)
+        x_f, A_f, obj = res.x, res.A, res.obj
+    else:
+        x_f, A_f, obj = LP.solve_lp_scipy(inst)
+    best = None
+    for r in range(max(best_of, 1)):
+        x_i, A_i = round_solution(inst, x_f, A_f, seed * 131 + r)
+        x, A = repair(inst, x_i, A_i)
+        val = inst.objective(A)
+        if best is None or val > best[0]:
+            best = (val, x, A)
+    _, x, A = best
+    return x, A, {"lp_obj": obj}
+
+
+def lr_window(inst: JDCRInstance):
+    """The LR upper bound (fractional optimum, paper's 'LR')."""
+    _, _, obj = LP.solve_lp_scipy(inst)
+    return obj
+
+
+def run_offline(cfg: MECConfig, algo: str = "cocar", solver: str = "scipy",
+                seed: int = 0, scenario: Scenario = None):
+    """Runs `algo` over cfg.n_windows windows; returns aggregate metrics.
+
+    algo in {cocar, lr, greedy, random, spr3, gatmarl}.
+    """
+    from repro.core import baselines as BL
+
+    sc = scenario or Scenario(cfg)
+    x_prev = sc.empty_cache()
+    results, lr_objs = [], []
+    for w in range(cfg.n_windows):
+        inst = sc.instance(w, x_prev)
+        if algo == "cocar":
+            x, A, _ = cocar_window(inst, seed=seed * 1000 + w, solver=solver)
+        elif algo == "lr":
+            lr_objs.append(lr_window(inst) / inst.U)
+            # LR is an upper bound, not a deployable policy: carry greedy
+            # caching forward so later windows stay comparable
+            x, A, _ = cocar_window(inst, seed=seed * 1000 + w, solver=solver)
+        elif algo == "greedy":
+            x, A = BL.greedy(inst)
+        elif algo == "random":
+            x, A = BL.random_policy(inst, seed=seed * 1000 + w)
+        elif algo == "spr3":
+            x, A = BL.spr3(inst, seed=seed * 1000 + w)
+        elif algo == "gatmarl":
+            x, A = BL.gatmarl(inst, seed=seed)
+        else:
+            raise ValueError(algo)
+        results.append(MET.window_metrics(inst, x, A))
+        x_prev = x
+    agg = MET.aggregate(results)
+    if algo == "lr":
+        agg["lr_bound"] = float(np.mean(lr_objs))
+    return agg

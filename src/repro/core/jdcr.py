@@ -1,0 +1,97 @@
+"""JDCR problem instance (paper Sec. IV): joint dynamic-model caching and
+request routing within one observation window.
+
+Array conventions (rectangular: every model type has the same number of
+submodels H; the empty submodel h0 is slot 0 of the caching variable only):
+
+  x      (N, M, H+1)   caching one-hot over {h0, h1..hH}   (paper x_{n,h})
+  A      (N, U, H)     routing to real submodels h1..hH    (paper A_{n,u,h})
+  sizes  (M, H+1)      r_h bytes-like units (slot 0 = 0)
+  prec   (M, H+1)      p_h (slot 0 = 0)
+  flops  (M, H+1)      c_h per data unit (slot 0 = 0)
+  loadD  (M, H+1, H+1) D_m(h', h) switching latency, rows = previous state
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class JDCRInstance:
+    # catalog
+    sizes: np.ndarray      # (M, H+1)
+    prec: np.ndarray       # (M, H+1)
+    flops: np.ndarray      # (M, H+1)
+    loadD: np.ndarray      # (M, H+1, H+1)
+    # infrastructure
+    R: np.ndarray          # (N,) memory capacity
+    C: np.ndarray          # (N,) compute capacity (flops/s)
+    phi: np.ndarray        # (N,) wireless rate (data units/s)
+    wired: np.ndarray      # (N, N) wired rate
+    lam: np.ndarray        # (N, N) propagation latency home->target (s)
+    # requests (one observation window)
+    m_u: np.ndarray        # (U,) requested model type
+    d_u: np.ndarray        # (U,) data size
+    ddl: np.ndarray        # (U,) latency budget
+    s_u: np.ndarray        # (U,) initiation time in window
+    home: np.ndarray       # (U,) home BS
+    # previous window caching state
+    x_prev: np.ndarray     # (N, M, H+1) one-hot
+
+    @property
+    def N(self):
+        return len(self.R)
+
+    @property
+    def M(self):
+        return self.sizes.shape[0]
+
+    @property
+    def H(self):
+        return self.sizes.shape[1] - 1
+
+    @property
+    def U(self):
+        return len(self.m_u)
+
+    # ------------------------------------------------------------------
+    def comm_latency(self) -> np.ndarray:
+        """(U, N): T^off term for routing user u to BS n (excl. inference)."""
+        up = self.d_u / self.phi[self.home]                       # (U,)
+        wired = self.d_u[:, None] / self.wired[self.home, :]      # (U, N)
+        wired[self.wired[self.home, :] <= 0] = 0.0
+        lam = self.lam[self.home, :]                              # (U, N)
+        return up[:, None] + wired + lam
+
+    def e2e_latency(self) -> np.ndarray:
+        """(N, U, H): T̂_{n,u,h} = comm + inference (paper Eq. 15)."""
+        comm = self.comm_latency()                                # (U, N)
+        infer = (self.flops[self.m_u, 1:][None, :, :]
+                 * self.d_u[None, :, None] / self.C[:, None, None])
+        return comm.T[:, :, None] + infer                         # (N,U,H)
+
+    def load_latency(self) -> np.ndarray:
+        """(N, U, H): model-m_u load time at BS n (paper Eq. 16), determined
+        by the previous window's caching state."""
+        # T[n, m, h] = sum_h' x_prev[n,m,h'] * loadD[m, h', h]
+        T = np.einsum("nmp,mph->nmh", self.x_prev, self.loadD)
+        return T[:, self.m_u, 1:]                                 # (N,U,H)
+
+    def objective(self, A) -> float:
+        return float(np.sum(A * self.prec[self.m_u, 1:][None]))
+
+
+def check_feasible(inst: JDCRInstance, x, A, atol=1e-6):
+    """Constraint residuals for integer/fractional (x, A)."""
+    res = {}
+    res["one_submodel"] = np.max(np.abs(x.sum(-1) - 1.0))
+    res["memory"] = np.max(np.sum(x * inst.sizes[None], axis=(1, 2)) - inst.R)
+    res["route"] = np.max(A.sum(axis=(0, 2)) - 1.0)
+    xa = x[:, inst.m_u, 1:]                                       # (N,U,H)
+    res["A_le_x"] = np.max(A - xa)
+    res["latency"] = np.max((A * inst.e2e_latency()).sum(axis=(0, 2)) - inst.ddl)
+    res["load"] = np.max((A * inst.load_latency()).sum(axis=(0, 2)) - inst.s_u)
+    res["ok"] = all(v <= atol for k, v in res.items() if k != "ok")
+    return res

@@ -1,0 +1,394 @@
+"""CoCaR-OL — the online extension (paper Sec. VI, Alg. 2) and the online
+baselines (LFU, LFU-MAD, Random), with and without dynamic-DNN partitioning.
+
+Implements faithfully:
+  * the download state machine (Eqs. 35–37): submodel components download
+    sequentially from the cloud at W_n, across slot boundaries; the cache
+    switches to a submodel the slot after its Δ finishes;
+  * QoE (Eq. 40) and argmax-QoE routing (Eq. 41);
+  * expected-future-gain caching (Eqs. 45–47) with a memory-constrained
+    multi-choice knapsack per adjusted BS (Alg. 2 lines 15–21);
+  * eviction/shrink is immediate (Eq. 49).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.mec.scenario import MECConfig, Scenario
+
+
+@dataclass
+class OnlineConfig:
+    slot_s: float = 0.5
+    n_slots: int = 100
+    rounds: int = 3              # BSs adjusted per slot
+    dT_past: int = 10
+    dT_future: int = 5
+    alpha: float = 0.9           # QoE smoothing (Eq. 40)
+    gamma: float = 0.9           # future-gain discount (Eq. 46)
+    partition: bool = True       # dynamic-DNN submodel switching enabled
+    pop_change_every: int = 20   # slots
+    pop_warmup: int = 5
+    knap_units: int = 64         # V: discrete capacity states
+
+
+class OnlineSim:
+    """Per-BS popularity request stream + download/cache state machine."""
+
+    def __init__(self, cfg: MECConfig, ocfg: OnlineConfig):
+        self.cfg, self.ocfg = cfg, ocfg
+        self.sc = Scenario(cfg)
+        rng = self.sc.rng
+        N, M, H = cfg.n_bs, cfg.n_models, self.sc.sizes.shape[1] - 1
+        self.N, self.M, self.H = N, M, H
+        # per-BS popularity, re-drawn every pop_change_every slots
+        self.pop = np.stack([self._draw_pop() for _ in range(N)])
+        self.pop_next = self.pop.copy()
+        # state
+        self.X = np.zeros((N, M, H + 1))
+        self.X[:, :, 0] = 1
+        self.O = np.zeros((N, M, H))            # remaining download bytes->MB
+        self.target = np.zeros((N, M), dtype=int)   # download target submodel
+        self.hist = deque(maxlen=ocfg.dT_past)      # (N, M) request counts
+        self.W = np.full(N, cfg.cloud_mbps / 8.0)   # MB/s cloud->BS
+        # θ: minimum achievable end-to-end latency (Eq. 40 normalizer)
+        self.theta = self._theta()
+
+    def _draw_pop(self):
+        from repro.mec.scenario import zipf_popularity
+        return zipf_popularity(self.cfg.n_models, self.cfg.zipf, self.sc.rng)
+
+    def _theta(self):
+        d = self.cfg.data_mb
+        comm = d / self.sc.phi.min()
+        infer = (self.sc.flops[:, 1] * d / self.sc.C.max()).min()
+        return comm + 2 * self.cfg.hop_latency_s + infer
+
+    # ---------------- request stream ----------------
+    def draw_slot_requests(self, t):
+        cfg, ocfg = self.cfg, self.ocfg
+        ce = ocfg.pop_change_every
+        if ce and t % ce == ce - ocfg.pop_warmup:
+            self.pop_next = np.stack([self._draw_pop() for _ in range(self.N)])
+        if ce and t % ce == 0 and t > 0:
+            self.pop = self.pop_next.copy()
+        warm = 1.0
+        rng = self.sc.rng
+        home = rng.integers(0, self.N, size=cfg.n_users)
+        m_u = np.empty(cfg.n_users, dtype=int)
+        for n in range(self.N):
+            sel = home == n
+            # warm-up blend toward the next popularity
+            ph = self.pop[n]
+            if ce:
+                k = t % ce
+                if k >= ce - self.ocfg.pop_warmup:
+                    w = (k - (ce - self.ocfg.pop_warmup) + 1) / self.ocfg.pop_warmup
+                    ph = (1 - w) * self.pop[n] + w * self.pop_next[n]
+                    ph = ph / ph.sum()
+            m_u[sel] = rng.choice(self.M, size=sel.sum(), p=ph)
+        return m_u, home
+
+    # ---------------- Eqs. 35–37: routine update ----------------
+    def routine_update(self):
+        N, M, H = self.N, self.M, self.H
+        dt = self.ocfg.slot_s
+        for n in range(N):
+            budget = self.W[n] * dt
+            for m in range(M):
+                for h in range(H):          # sequential: smaller first
+                    if self.O[n, m, h] > 0 and budget > 0:
+                        used = min(self.O[n, m, h], budget)
+                        self.O[n, m, h] -= used
+                        budget -= used
+                        if self.O[n, m, h] <= 1e-12:
+                            self.O[n, m, h] = 0.0
+                            # finished: cache switches to h+1 (Eq. 37)
+                            self.X[n, m, :] = 0
+                            self.X[n, m, h + 1] = 1
+        return self.X
+
+    # ---------------- Eq. 39/40: latency & QoE (vectorized) ----------------
+    def qoe_matrix(self, X=None):
+        """(N_home, N_target, M) QoE and latency with cache state X."""
+        sc, cfg = self.sc, self.cfg
+        X = self.X if X is None else X
+        d = cfg.data_mb
+        h_cached = np.argmax(X, axis=-1)                  # (N, M)
+        P = np.take_along_axis(sc.prec[None].repeat(self.N, 0),
+                               h_cached[:, :, None], axis=2)[:, :, 0]
+        c = np.take_along_axis(sc.flops[None].repeat(self.N, 0),
+                               h_cached[:, :, None], axis=2)[:, :, 0]
+        infer = c * d / sc.C[:, None]                     # (N, M)
+        comm = (d / sc.phi)[:, None] \
+            + np.where(np.eye(self.N, dtype=bool), 0.0,
+                       d / (cfg.wired_mbps / 8.0)) + sc.lam   # (N_home, N_tgt)
+        lat = comm[:, :, None] + infer[None, :, :]        # (Nh, Nt, M)
+        q = P[None] * np.clip(1.0 - (lat - self.theta) * self.ocfg.alpha,
+                              0.0, None)
+        q = np.where((P[None] > 0) & (lat <= cfg.ddl_s), q, 0.0)
+        return q, lat
+
+    def route(self, m_u, home):
+        """Eq. 41: argmax-QoE routing. Returns (total_qoe, hits)."""
+        q, _ = self.qoe_matrix()
+        best = q.max(axis=1)                              # (N_home, M)
+        vals = best[home, m_u]
+        return float(vals.sum()), int((vals > 0).sum())
+
+    # ---------------- Eqs. 45–47: expected future gain ----------------
+    def freq(self):
+        """(N, M) proportion of requests per (home BS, model)."""
+        if not self.hist:
+            return np.full((self.N, self.M), 1.0 / self.M / self.N)
+        tot = sum(h.sum() for h in self.hist)
+        return sum(self.hist) / max(tot, 1)
+
+    def slot_qoe(self, X):
+        """Expected one-slot total QoE under cache state X (Eq. 46 term)."""
+        q, _ = self.qoe_matrix(X)
+        best = q.max(axis=1)                              # (N_home, M)
+        return float((self.freq() * best).sum()) * self.cfg.n_users
+
+    def future_gain(self, n, m, h_tgt, X_hyp, X_during):
+        """Expected discounted QoE gain of the switch vs. keeping the
+        current state, over a matched horizon of (download delay + ΔT^F)
+        slots (Eq. 46/47; horizons must match or long downloads are
+        spuriously favoured by their extra discount terms)."""
+        cur = int(np.argmax(self.X[n, m]))
+        if h_tgt > cur:
+            if self.ocfg.partition:
+                delta = self.sc.sizes[m, h_tgt] - self.sc.sizes[m, cur]
+            else:
+                delta = self.sc.sizes[m, h_tgt]
+            delay = int(np.ceil(delta / (self.W[n] * self.ocfg.slot_s)))
+        else:
+            delay = 0
+        g_dur = self.slot_qoe(X_during) if delay else 0.0
+        g_hyp = self.slot_qoe(X_hyp)
+        g_cur = self.slot_qoe(self.X)
+        gam = self.ocfg.gamma
+        g = 0.0
+        for k in range(1, delay + self.ocfg.dT_future + 1):
+            q_k = g_dur if k <= delay else g_hyp
+            g += gam ** k * (q_k - g_cur)
+        return g
+
+    # ---------------- Alg. 2 lines 15–21: caching decision ----------------
+    def _action_space(self, n, m):
+        """Paper Sec. VI-B: enlargements from the cached submodel up to (and
+        including) the first whose cumulative Δ cannot be fully downloaded
+        within one time slot; all shrinks are allowed."""
+        sc, ocfg = self.sc, self.ocfg
+        cur = int(np.argmax(self.X[n, m]))
+        acts = list(range(0, cur))                        # shrinks / evict
+        if not ocfg.partition:
+            return acts + ([self.H] if cur < self.H else [])
+        budget = self.W[n] * ocfg.slot_s
+        cum = 0.0
+        for h in range(cur + 1, self.H + 1):
+            acts.append(h)
+            cum += sc.sizes[m, h] - sc.sizes[m, h - 1]
+            if cum > budget:
+                break                                     # first over-budget:
+        return acts                                       # included, then stop
+
+    def adjust_bs(self, n):
+        sc, ocfg = self.sc, self.ocfg
+        M, H = self.M, self.H
+        best = (1e-9, None)
+        for m in range(M):
+            if self.O[n, m].sum() > 0:
+                continue                                  # downloading: frozen
+            cur = int(np.argmax(self.X[n, m]))
+            for h_tgt in self._action_space(n, m):
+                if h_tgt == cur or h_tgt == 0:
+                    continue
+                X_hyp, shrunk = self._fit(n, m, h_tgt)
+                if X_hyp is None:
+                    continue
+                X_during = X_hyp.copy()                   # shrinks immediate,
+                X_during[n, m, :] = 0                     # upgrade pending
+                X_during[n, m, cur] = 1
+                gain = self.future_gain(n, m, h_tgt, X_hyp, X_during)
+                if gain > best[0]:
+                    best = (gain, (m, h_tgt, shrunk))
+        if best[1] is None:
+            return
+        m, h_tgt, shrunk = best[1]
+        cur = int(np.argmax(self.X[n, m]))
+        for (m2, h2) in shrunk:                           # evict/shrink (Eq. 49)
+            self.X[n, m2, :] = 0
+            self.X[n, m2, h2] = 1
+        if h_tgt < cur:
+            self.X[n, m, :] = 0
+            self.X[n, m, h_tgt] = 1                       # shrink: immediate
+        else:
+            if self.ocfg.partition:
+                # enqueue Δ downloads for each intermediate submodel (Eq. 48);
+                # sizes[:, 0] == 0 so delta is uniform
+                for h in range(cur + 1, h_tgt + 1):
+                    self.O[n, m, h - 1] = sc.sizes[m, h] - sc.sizes[m, h - 1]
+            else:
+                # no partitioning: the complete model must be downloaded
+                self.O[n, m, h_tgt - 1] = sc.sizes[m, h_tgt]
+            self.target[n, m] = h_tgt
+
+    def _fit(self, n, m, h_tgt):
+        """Multi-choice knapsack (quantized): shrink other models so that
+        (m -> h_tgt) fits; maximizes retained immediate QoE-weight."""
+        sc = self.sc
+        M, H = self.M, self.H
+        R = sc.R[n]
+        need = sc.sizes[m, h_tgt]
+        others = [m2 for m2 in range(M) if m2 != m]
+        f = self.freq().sum(0)                            # (M,) demand weight
+        budget = R - need
+        choice = {}
+        # models mid-download are LOCKED at their target size: shrinking them
+        # now would be undone (over capacity) when the download lands
+        free_others = []
+        for m2 in others:
+            if self.O[n, m2].sum() > 0:
+                budget -= sc.sizes[m2, self.target[n, m2]]
+                choice[m2] = int(np.argmax(self.X[n, m2]))
+            else:
+                free_others.append(m2)
+        if budget < 0:
+            return None, None
+        # greedy multi-choice knapsack: keep high-demand models as large as
+        # the remaining budget allows, shrink/evict the rest
+        allowed = range(0, H + 1) if self.ocfg.partition else (0, H)
+        for m2 in sorted(free_others, key=lambda mm: -f[mm]):
+            cur2 = int(np.argmax(self.X[n, m2]))
+            choice[m2] = 0
+            for h2 in sorted((h for h in allowed if h <= cur2), reverse=True):
+                if sc.sizes[m2, h2] <= budget + 1e-9:
+                    choice[m2] = h2
+                    budget -= sc.sizes[m2, h2]
+                    break
+        X_hyp = self.X.copy()
+        shrunk = []
+        for m2, h2 in choice.items():
+            cur2 = int(np.argmax(self.X[n, m2]))
+            if h2 != cur2:
+                shrunk.append((m2, h2))
+            X_hyp[n, m2, :] = 0
+            X_hyp[n, m2, h2] = 1
+        X_hyp[n, m, :] = 0
+        X_hyp[n, m, h_tgt] = 1
+        return X_hyp, shrunk
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+def run_online(cfg: MECConfig, ocfg: OnlineConfig, algo: str = "cocar-ol",
+               seed: int = 0):
+    cfg = MECConfig(**{**cfg.__dict__, "seed": seed})
+    sim = OnlineSim(cfg, ocfg)
+    rng = np.random.default_rng(seed + 99)
+    total_qoe, total_hits, total_users = 0.0, 0, 0
+    for t in range(ocfg.n_slots):
+        sim.routine_update()
+        m_u, home = sim.draw_slot_requests(t)
+        q, hits = sim.route(m_u, home)
+        total_qoe += q
+        total_hits += hits
+        total_users += len(m_u)
+        counts = np.zeros((sim.N, sim.M))
+        np.add.at(counts, (home, m_u), 1.0)
+        sim.hist.append(counts)
+        if algo == "cocar-ol":
+            for n in rng.integers(0, sim.N, size=ocfg.rounds):
+                sim.adjust_bs(n)
+        elif algo in ("lfu", "lfu-mad"):
+            _lfu_step(sim, rng, ocfg, mad=(algo == "lfu-mad"))
+        elif algo == "random":
+            _random_step(sim, rng, ocfg)
+        else:
+            raise ValueError(algo)
+    return {"avg_qoe": total_qoe / total_users,
+            "hit_rate": total_hits / total_users}
+
+
+def _freq_weighted(sim: OnlineSim, mad: bool):
+    if not sim.hist:
+        return np.zeros((sim.N, sim.M))
+    if not mad:
+        return sum(sim.hist)
+    w = [0.8 ** (len(sim.hist) - 1 - i) for i in range(len(sim.hist))]
+    return sum(wi * h for wi, h in zip(w, sim.hist))
+
+
+def _lfu_step(sim: OnlineSim, rng, ocfg: OnlineConfig, mad=False):
+    """LFU / LFU-MAD: enlarge the most frequent model at the BS (+1-hop
+    neighbours' demand), shrink the least frequent until memory fits."""
+    freq = _freq_weighted(sim, mad)
+    adj = sim.sc.hops <= 1
+    for n in rng.integers(0, sim.N, size=ocfg.rounds):
+        f = freq[adj[n]].sum(0)                           # (M,)
+        order = np.argsort(-f)
+        sc = sim.sc
+        top = next((m for m in order if sim.O[n, m].sum() == 0), None)
+        if top is None:
+            continue
+        cur = int(np.argmax(sim.X[n, top]))
+        tgt = min(cur + 1, sim.H) if ocfg.partition else sim.H
+        if tgt == cur:
+            continue
+        # shrink least-frequent models until the enlargement fits
+        used = sum(sc.sizes[m2, int(np.argmax(sim.X[n, m2]))]
+                   for m2 in range(sim.M))
+        used += max(sc.sizes[top, tgt] - sc.sizes[top, cur] * (cur > 0), 0)
+        for m2 in np.argsort(f):
+            if used <= sc.R[n]:
+                break
+            if m2 == top:
+                continue
+            c2 = int(np.argmax(sim.X[n, m2]))
+            if c2 == 0:
+                continue
+            new2 = c2 - 1 if ocfg.partition else 0
+            used -= sc.sizes[m2, c2] - sc.sizes[m2, new2]
+            sim.X[n, m2, :] = 0
+            sim.X[n, m2, new2] = 1
+        if used <= sc.R[n]:
+            delta = sc.sizes[top, tgt] - (sc.sizes[top, cur] if (cur and ocfg.partition) else 0.0)
+            sim.O[n, top, tgt - 1] = max(delta, 0.0)
+            sim.target[n, top] = tgt
+
+
+def _random_step(sim: OnlineSim, rng, ocfg: OnlineConfig):
+    sc = sim.sc
+    for n in rng.integers(0, sim.N, size=ocfg.rounds):
+        candidates = [m for m in range(sim.M) if sim.O[n, m].sum() == 0]
+        if not candidates:
+            continue
+        m = candidates[rng.integers(len(candidates))]
+        cur = int(np.argmax(sim.X[n, m]))
+        tgt = min(cur + 1, sim.H) if ocfg.partition else sim.H
+        if tgt == cur:
+            continue
+        used = sum(sc.sizes[m2, int(np.argmax(sim.X[n, m2]))]
+                   for m2 in range(sim.M))
+        used += sc.sizes[m, tgt] - (sc.sizes[m, cur] if cur else 0.0)
+        others = [m2 for m2 in rng.permutation(sim.M) if m2 != m]
+        for m2 in others:
+            if used <= sc.R[n]:
+                break
+            c2 = int(np.argmax(sim.X[n, m2]))
+            if c2 == 0:
+                continue
+            new2 = rng.integers(0, c2) if ocfg.partition else 0
+            used -= sc.sizes[m2, c2] - sc.sizes[m2, new2]
+            sim.X[n, m2, :] = 0
+            sim.X[n, m2, new2] = 1
+        if used <= sc.R[n]:
+            delta = sc.sizes[m, tgt] - (sc.sizes[m, cur] if (cur and ocfg.partition) else 0.0)
+            sim.O[n, m, tgt - 1] = max(delta, 0.0)
+            sim.target[n, m] = tgt

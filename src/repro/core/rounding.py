@@ -1,0 +1,137 @@
+"""CoCaR randomized rounding (paper Alg. 1) + feasibility repair (Sec. V-D).
+
+Rounding is fully vectorized JAX:
+  * caching: one multinoulli draw per (BS, model type) with probabilities
+    x†[n,m,:]  (Lines 2–6),
+  * routing: Bernoulli φ̃ with success probability A†/x† (Lines 7–13),
+    Ã = x̃ · φ̃, ỹ = 1(Σ_h Ã > 0).
+
+Repair (host-side numpy, Sec. V-D "Extension to Practice"):
+  1. memory violations: repeatedly shrink the least-beneficial cached
+     submodel (or evict to h0), redirecting now-unserved users to the cloud;
+  2. latency / load violations: send the offending routes to the cloud;
+  3. multiple routes: keep the highest-precision one.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.jdcr import JDCRInstance
+
+
+def round_solution(inst: JDCRInstance, x_frac, A_frac, key):
+    """Vectorized Alg. 1. Returns integer (x̃ (N,M,H+1), Ã (N,U,H))."""
+    N, M, H, U = inst.N, inst.M, inst.H, inst.U
+    xf = jnp.asarray(x_frac)
+    Af = jnp.asarray(A_frac)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key) if isinstance(key, int)
+                              else key)
+
+    probs = jnp.clip(xf, 0.0, 1.0)
+    probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-12)
+    cat = jax.random.categorical(k1, jnp.log(probs + 1e-12), axis=-1)  # (N,M)
+    x_int = jax.nn.one_hot(cat, H + 1)                                  # (N,M,H+1)
+
+    xa = xf[:, inst.m_u, 1:]                                            # (N,U,H)
+    phi_p = jnp.where(xa > 1e-12, Af / jnp.maximum(xa, 1e-12), 0.0)
+    phi = jax.random.bernoulli(k2, jnp.clip(phi_p, 0.0, 1.0))           # (N,U,H)
+    x_sel = x_int[:, inst.m_u, 1:]                                      # (N,U,H)
+    A_int = x_sel * phi.astype(x_sel.dtype)
+    return np.asarray(x_int), np.asarray(A_int)
+
+
+def _dedupe_routes(inst: JDCRInstance, A):
+    """Keep at most one route per user — the highest-precision one."""
+    N, U, H = A.shape
+    prec_u = inst.prec[inst.m_u, 1:]                        # (U,H)
+    for u in range(U):
+        nz = np.argwhere(A[:, u, :] > 0)
+        if len(nz) <= 1:
+            continue
+        best = max(nz, key=lambda nh: prec_u[u, nh[1]])
+        A[:, u, :] = 0
+        A[best[0], u, best[1]] = 1
+    return A
+
+
+def repair(inst: JDCRInstance, x, A):
+    """Sec. V-D heuristic: convert rounded (x̃, Ã) into feasible (x, y)."""
+    x = np.array(x, dtype=np.float64)
+    A = np.array(A, dtype=np.float64)
+    N, M, H = inst.N, inst.M, inst.H
+    prec_u = inst.prec[inst.m_u, 1:]                        # (U,H)
+
+    A = _dedupe_routes(inst, A)
+
+    # ---- 1. memory -----------------------------------------------------
+    for n in range(N):
+        def used():
+            return float(np.sum(x[n] * inst.sizes))
+        while used() > inst.R[n] + 1e-9:
+            # benefit per cached (m, h>0): routed users × precision
+            cached = [(m, int(np.argmax(x[n, m]))) for m in range(M)]
+            benefits = []
+            for m, h in cached:
+                if h == 0:
+                    continue
+                users = [u for u in range(inst.U)
+                         if inst.m_u[u] == m and A[n, u, h - 1] > 0]
+                benefits.append((sum(prec_u[u, h - 1] for u in users), m, h))
+            if not benefits:
+                break
+            benefits.sort()
+            _, m, h = benefits[0]
+            # try the largest smaller submodel that fits
+            slack = inst.R[n] - (used() - inst.sizes[m, h])
+            new_h = 0
+            for hh in range(h - 1, 0, -1):
+                if inst.sizes[m, hh] <= slack + 1e-9:
+                    new_h = hh
+                    break
+            x[n, m, :] = 0
+            x[n, m, new_h] = 1
+            for u in range(inst.U):
+                if inst.m_u[u] == m and A[n, u, h - 1] > 0:
+                    A[n, u, h - 1] = 0
+                    # downgraded service if a smaller submodel remains
+                    if new_h > 0:
+                        A[n, u, new_h - 1] = 1
+
+    # routes must point at cached submodels
+    x_sel = x[:, inst.m_u, 1:].transpose(0, 1, 2)           # (N,U,H)
+    A = A * (x_sel > 0)
+
+    # ---- 2. latency & load ----------------------------------------------
+    T = inst.e2e_latency()
+    L = inst.load_latency()
+    lat_u = np.einsum("nuh->u", A * T)
+    load_u = np.einsum("nuh->u", A * L)
+    bad = (lat_u > inst.ddl + 1e-9) | (load_u > inst.s_u + 1e-9)
+    A[:, bad, :] = 0.0
+
+    # ---- 3. route repair (beyond Sec. V-D, routing-only and constraint-
+    # safe): unserved users whose model IS cached at some feasible BS are
+    # routed there instead of the cloud (contention-free model: adding a
+    # route violates nothing)
+    cached_h = np.argmax(x, axis=-1)                        # (N, M)
+    unserved = np.nonzero(A.sum(axis=(0, 2)) == 0)[0]
+    for u in unserved:
+        m = inst.m_u[u]
+        best = None
+        for n in range(N):
+            h = cached_h[n, m]
+            if h == 0:
+                continue
+            if T[n, u, h - 1] > inst.ddl[u] + 1e-9:
+                continue
+            if L[n, u, h - 1] > inst.s_u[u] + 1e-9:
+                continue
+            p = prec_u[u, h - 1]
+            if best is None or p > best[0]:
+                best = (p, n, h - 1)
+        if best is not None:
+            A[best[1], u, best[2]] = 1.0
+
+    return x, A

@@ -1,0 +1,81 @@
+"""Executable versions of the paper's theory (Thms 1–5): approximation and
+constraint-violation bounds, checkable against empirical rounding draws.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.jdcr import JDCRInstance
+from repro.core.rounding import round_solution
+
+
+def n_submodels(inst: JDCRInstance) -> int:
+    return inst.M * inst.H
+
+
+def theorem1_ratio(inst: JDCRInstance, lp_obj: float):
+    """(1 - sqrt(4 ln|H| / P†))² — valid when P† >= 4 ln|H| (Thm 1)."""
+    lH = np.log(n_submodels(inst))
+    if lp_obj < 4 * lH:
+        return None
+    d = np.sqrt(4 * lH / lp_obj)
+    return (1 - d) ** 2
+
+
+def _violation_factor(zeta: float, inst: JDCRInstance):
+    """(sqrt(2 ln|H| / ζ) + 1/√2)² + 1/2 — Thms 2–5's common shape."""
+    lH = np.log(n_submodels(inst))
+    if zeta <= 0:
+        return np.inf
+    return (np.sqrt(2 * lH / zeta) + 1 / np.sqrt(2)) ** 2 + 0.5
+
+
+def bounds(inst: JDCRInstance, x_frac, A_frac, lp_obj: float):
+    """All five theorem bounds for one fractional solution."""
+    zeta_mem = np.einsum("nmh,mh->n", x_frac, inst.sizes)        # (N,)
+    eta = A_frac.sum(axis=(0, 2))                                # (U,)
+    T = inst.e2e_latency()
+    L = inst.load_latency()
+    lat = np.einsum("nuh,nuh->u", A_frac, T)
+    load = np.einsum("nuh,nuh->u", A_frac, L)
+    return {
+        "thm1_ratio": theorem1_ratio(inst, lp_obj),
+        "thm2_memory_factor": [
+            float(_violation_factor(z / max(inst.R.max(), 1e-9) * 8, inst))
+            for z in zeta_mem],
+        "thm3_route_factor": float(np.median(
+            [_violation_factor(e, inst) for e in eta if e > 0] or [np.inf])),
+        "thm4_latency_factor": float(np.median(
+            [_violation_factor(l / d, inst)
+             for l, d in zip(lat, inst.ddl) if l > 0] or [np.inf])),
+        "thm5_load_factor": float(np.median(
+            [_violation_factor(l / max(s, 1e-9), inst)
+             for l, s in zip(load, inst.s_u) if l > 0] or [np.inf])),
+    }
+
+
+def empirical_violations(inst: JDCRInstance, x_frac, A_frac, draws: int = 100,
+                         seed: int = 0):
+    """Empirical max violation factors over rounding draws (no repair)."""
+    mem_f, route_f, obj = [], [], []
+    used_per_bs = []
+    T = inst.e2e_latency()
+    lat_f = []
+    for s in range(draws):
+        x_i, A_i = round_solution(inst, x_frac, A_frac, seed + s)
+        used = np.einsum("nmh,mh->n", x_i, inst.sizes)
+        used_per_bs.append(used / inst.R)
+        mem_f.append(float(np.max(used / inst.R)))
+        route_f.append(float(np.max(A_i.sum(axis=(0, 2)))))
+        lat = np.einsum("nuh,nuh->u", A_i, T)
+        lat_f.append(float(np.max(lat / inst.ddl)))
+        obj.append(inst.objective(A_i))
+    return {
+        "memory_factor_max": max(mem_f),
+        # Lemma 1: per-BS expectation of memory use is <= R
+        "memory_expectation_per_bs": np.mean(used_per_bs, axis=0).tolist(),
+        "route_max": max(route_f),
+        "latency_factor_max": max(lat_f),
+        "obj_mean": float(np.mean(obj)),
+        "obj_std": float(np.std(obj)),
+    }

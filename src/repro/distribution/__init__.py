@@ -1,0 +1,2 @@
+from repro.distribution.sharding import (batch_specs, cache_specs,  # noqa: F401
+                                         param_specs, shard_axis)

@@ -1,0 +1,101 @@
+"""Pallas TPU decode attention: one query token vs. a long KV cache.
+
+Memory-bound by design: the KV cache streams HBM->VMEM in S-blocks while the
+(H, E) query tile and f32 accumulators stay resident in VMEM.  GQA is kept
+honest — each query head group reduces against its own kv head, no
+materialized head repetition.  The valid length (current decode position,
+or the full ring for wrapped SWA caches) arrives as a scalar-prefetch
+argument in SMEM.
+
+Layouts: q (B, H, E); k, v (B, T, K, E); out (B, H, E).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
+            bk, nk, G, scale):
+    jk = pl.program_id(1)
+    k_start = jk * bk
+
+    @pl.when(jk == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    valid_len = len_ref[0]
+
+    @pl.when(k_start < valid_len)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                    # (H, E)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, K, E)
+        v = v_ref[0].astype(jnp.float32)
+        H, E = q.shape
+        K = k.shape[1]
+        qg = q.reshape(K, G, E)
+        # scores (K, G, bk)
+        s = jax.lax.dot_general(qg, k, (((2,), (2,)), ((0,), (1,))),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (K, G, bk), 2)
+        s = jnp.where(kpos < valid_len, s, NEG_INF)
+
+        m_prev = m_s[...]                                   # (K, G)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=2))
+        p = jnp.exp(s - m_new[:, :, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = corr * l_s[...] + jnp.sum(p, axis=2)
+        # pv: (K, G, E)
+        pv = jax.lax.dot_general(p, v, (((2,), (0,)), ((0,), (1,))),
+                                 preferred_element_type=jnp.float32)
+        acc[...] = corr[:, :, None] * acc[...] + pv
+        m_s[...] = m_new
+
+    @pl.when(jk == nk - 1)
+    def _finalize():
+        K, G, E = acc.shape
+        out = acc[...] / jnp.maximum(l_s[...], 1e-30)[:, :, None]
+        o_ref[0] = out.reshape(K * G, E).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, valid_len, *, block_k=512, interpret=None):
+    """q: (B, H, E); k, v: (B, T, K, E); valid_len: () int32 -> (B, H, E)."""
+    B, H, E = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    bk = min(block_k, T)
+    assert T % bk == 0
+    nk = T // bk
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+
+    kern = functools.partial(_kernel, bk=bk, nk=nk, G=G, scale=E ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, nk),
+        in_specs=[
+            pl.BlockSpec((1, H, E), lambda b, jk, L: (b, 0, 0)),
+            pl.BlockSpec((1, bk, K, E), lambda b, jk, L: (b, jk, 0, 0)),
+            pl.BlockSpec((1, bk, K, E), lambda b, jk, L: (b, jk, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, E), lambda b, jk, L: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((K, G, E), jnp.float32),
+            pltpu.VMEM((K, G), jnp.float32),
+            pltpu.VMEM((K, G), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, E), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(valid_len, jnp.int32).reshape(1), q, k, v)

@@ -1,0 +1,97 @@
+"""Pallas TPU fused early-exit head — the paper-specific kernel.
+
+A dynamic-DNN serving stack evaluates an ExtNet head per request to get the
+predicted token AND a confidence signal (max softmax probability, used by
+exit policies / the precision ladder).  Done naively this materializes the
+(T, V) logits to HBM (hundreds of MB per batch).  This kernel fuses
+
+    RMSNorm(h) @ W  ->  online (max, argmax, sum-exp) over vocab tiles
+
+so only (T,) token ids and (T,) confidences ever leave VMEM — turning a
+V-wide memory-bound pass into a single streaming reduction.
+
+Grid (nt, nv): vocab tiles iterate sequentially per token tile; scratch
+carries the running max/argmax/sumexp.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(h_ref, w_ref, head_ref, tok_ref, conf_ref, m_s, l_s, a_s, *,
+            bt, bv, nv, eps):
+    jv = pl.program_id(1)
+
+    @pl.when(jv == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        a_s[...] = jnp.zeros_like(a_s)
+
+    h = h_ref[...].astype(jnp.float32)                   # (bt, D)
+    var = jnp.mean(h * h, axis=1, keepdims=True)
+    hn = h * jax.lax.rsqrt(var + eps) * w_ref[...].astype(jnp.float32)[None]
+    logits = jax.lax.dot_general(hn, head_ref[...].astype(jnp.float32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (bt,bv)
+
+    blk_max = jnp.max(logits, axis=1)
+    blk_arg = jnp.argmax(logits, axis=1).astype(jnp.int32) + jv * bv
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, blk_max)
+    l_s[...] = jnp.exp(m_prev - m_new) * l_s[...] + \
+        jnp.sum(jnp.exp(logits - m_new[:, None]), axis=1)
+    a_s[...] = jnp.where(blk_max > m_prev, blk_arg, a_s[...])
+    m_s[...] = m_new
+
+    @pl.when(jv == nv - 1)
+    def _finalize():
+        tok_ref[...] = a_s[...]
+        conf_ref[...] = (1.0 / jnp.maximum(l_s[...], 1e-30)).astype(
+            conf_ref.dtype)          # p_max = exp(m - logsumexp) = 1/l
+
+
+def early_exit_head(h, norm_w, head_w, *, block_t=256, block_v=1024,
+                    eps=1e-5, interpret=None):
+    """h: (T, D); norm_w: (D,); head_w: (D, V) ->
+    (token_ids (T,) int32, p_max (T,) float32)."""
+    T, D = h.shape
+    V = head_w.shape[1]
+    bt = min(block_t, T)
+    bv = min(block_v, V)
+    assert T % bt == 0 and V % bv == 0, (T, bt, V, bv)
+    nt, nv = T // bt, V // bv
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+
+    kern = functools.partial(_kernel, bt=bt, bv=bv, nv=nv, eps=eps)
+    return pl.pallas_call(
+        kern,
+        grid=(nt, nv),
+        in_specs=[
+            pl.BlockSpec((bt, D), lambda it, jv: (it, 0)),
+            pl.BlockSpec((D,), lambda it, jv: (0,)),
+            pl.BlockSpec((D, bv), lambda it, jv: (0, jv)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt,), lambda it, jv: (it,)),
+            pl.BlockSpec((bt,), lambda it, jv: (it,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T,), jnp.int32),
+            jax.ShapeDtypeStruct((T,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bt,), jnp.float32),
+            pltpu.VMEM((bt,), jnp.float32),
+            pltpu.VMEM((bt,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(h, norm_w, head_w)

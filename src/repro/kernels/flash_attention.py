@@ -1,0 +1,111 @@
+"""Pallas TPU flash attention (prefill): online softmax over KV blocks.
+
+Grid (B, H, nq, nk); the last grid dim iterates sequentially on TPU so the
+(acc, m, l) scratch persists across KV blocks of one query tile.  Tiles are
+MXU-aligned (block_q × block_k ≥ 128×128, E a multiple of 8/128 lanes), all
+accumulation f32 in VMEM.  Causal tiles above the diagonal are skipped with
+``pl.when`` (the grid-level causal skip a fused XLA softmax cannot do).
+
+GQA layouts: q (B, H, S, E); k, v (B, K, T, E) with H = G·K — the kv-head
+index map (h -> h // G) reads each KV tile once per query-head group.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
+            causal, window, q_offset, bq, bk, nk, scale):
+    iq = pl.program_id(2)
+    jk = pl.program_id(3)
+
+    q_start = q_offset + iq * bq
+    k_start = jk * bk
+
+    @pl.when(jk == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    # grid-level tile skip: dead tiles (fully above the causal diagonal or
+    # fully outside the sliding window) never touch the MXU
+    live = jnp.bool_(True)
+    if causal:
+        live = jnp.logical_and(live, k_start <= q_start + bq - 1)
+    if window:
+        live = jnp.logical_and(live, k_start + bk - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, E)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, E)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            ok = kpos <= qpos
+        if window:
+            ok = jnp.logical_and(ok, kpos > qpos - window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = corr * l_s[...] + jnp.sum(p, axis=1)
+        acc[...] = corr[:, None] * acc[...] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    @pl.when(jk == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc[...] /
+                       jnp.maximum(l_s[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    block_q=128, block_k=128, interpret=None):
+    """q: (B, H, S, E); k, v: (B, K, T, E) -> (B, H, S, E)."""
+    B, H, S, E = q.shape
+    K, T = k.shape[1], k.shape[2]
+    G = H // K
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    assert S % bq == 0 and T % bk == 0, (S, bq, T, bk)
+    nq, nk = S // bq, T // bk
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+
+    kern = functools.partial(
+        _kernel, causal=causal, window=window, q_offset=q_offset,
+        bq=bq, bk=bk, nk=nk, scale=E ** -0.5)
+
+    return pl.pallas_call(
+        kern,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, E), lambda b, h, iq, jk: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, E), lambda b, h, iq, jk: (b, h // G, jk, 0)),
+            pl.BlockSpec((1, 1, bk, E), lambda b, h, iq, jk: (b, h // G, jk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, E), lambda b, h, iq, jk: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, E), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, E), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

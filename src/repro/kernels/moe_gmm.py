@@ -1,0 +1,58 @@
+"""Pallas TPU grouped expert matmul (MoE "gmm").
+
+Computes out[e] = x[e] @ w[e] for every expert in one kernel: the dispatched
+token buffers (E, C, D) never round-trip HBM between experts, and tiles are
+MXU-aligned.  Grid (E, nc, nf, nd) — the contraction dim iterates minor so
+the f32 accumulator tile stays in VMEM scratch across D-blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc, *, nd):
+    jd = pl.program_id(3)
+
+    @pl.when(jd == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jax.lax.dot_general(
+        x_ref[0], w_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(jd == nd - 1)
+    def _emit():
+        o_ref[0] = acc[...].astype(o_ref.dtype)
+
+
+def moe_gmm(x, w, *, block_c=128, block_f=128, block_d=512, interpret=None):
+    """x: (E, C, D); w: (E, D, F) -> (E, C, F)."""
+    E, C, D = x.shape
+    F = w.shape[2]
+    bc = min(block_c, C)
+    bf = min(block_f, F)
+    bd = min(block_d, D)
+    assert C % bc == 0 and F % bf == 0 and D % bd == 0, (C, F, D)
+    nc, nf, nd = C // bc, F // bf, D // bd
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+
+    kern = functools.partial(_kernel, nd=nd)
+    return pl.pallas_call(
+        kern,
+        grid=(E, nc, nf, nd),
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, ic, jf, jd: (e, ic, jd)),
+            pl.BlockSpec((1, bd, bf), lambda e, ic, jf, jd: (e, jd, jf)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, ic, jf, jd: (e, ic, jf)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

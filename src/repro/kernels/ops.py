@@ -1,0 +1,48 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+Each op auto-selects interpret mode off-TPU (validated against ref.py) and
+picks hardware-aligned block sizes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import early_exit as _ee
+from repro.kernels import flash_attention as _fa
+from repro.kernels import moe_gmm as _gmm
+from repro.kernels import ssm_scan as _ssm
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, causal=True, window=0, q_offset=0,
+                    block_q=128, block_k=128):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, block_q=block_q,
+                               block_k=block_k)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q, k, v, valid_len, block_k=512):
+    return _dec.decode_attention(q, k, v, valid_len, block_k=block_k)
+
+
+@jax.jit
+def ssm_chunk_scan(xbar, Bc, Cc, cum):
+    return _ssm.ssm_chunk_scan(xbar, Bc, Cc, cum)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_v"))
+def early_exit_head(h, norm_w, head_w, block_t=256, block_v=1024):
+    return _ee.early_exit_head(h, norm_w, head_w, block_t=block_t,
+                               block_v=block_v)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_d"))
+def moe_gmm(x, w, block_c=128, block_f=128, block_d=512):
+    return _gmm.moe_gmm(x, w, block_c=block_c, block_f=block_f,
+                        block_d=block_d)

@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, q_offset=0):
+    """q: (B, H, S, E); k, v: (B, K, T, E)."""
+    B, H, S, E = q.shape
+    K, T = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, S, E).astype(jnp.float32)
+    s = jnp.einsum("bkgse,bkte->bkgst", qg, k.astype(jnp.float32)) * E ** -0.5
+    qpos = q_offset + jnp.arange(S)
+    kpos = jnp.arange(T)
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok = kpos[None, :] <= qpos[:, None]
+    if window:
+        ok = ok & (kpos[None, :] > qpos[:, None] - window)
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bkte->bkgse", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, E).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, valid_len):
+    """q: (B, H, E); k, v: (B, T, K, E)."""
+    B, H, E = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, E).astype(jnp.float32)
+    s = jnp.einsum("bkge,btke->bkgt", qg, k.astype(jnp.float32)) * E ** -0.5
+    ok = jnp.arange(T) < valid_len
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btke->bkge", p, v.astype(jnp.float32))
+    return o.reshape(B, H, E).astype(q.dtype)
+
+
+def ssm_chunk_scan_ref(xbar, Bc, Cc, cum):
+    """Sequential-scan oracle. xbar: (B,H,NC,c,P); Bc/Cc: (B,NC,c,N);
+    cum: (B,H,NC,c) inclusive log-decay cumsum (per chunk)."""
+    B, H, NC, c, P = xbar.shape
+    N = Bc.shape[-1]
+
+    def per_bh(xb, cumh, Bb, Cb):
+        # xb (NC,c,P), cumh (NC,c), Bb/Cb (NC,c,N)
+        def chunk(state, inp):
+            x, cu, Bi, Ci = inp
+            seg = cu[:, None] - cu[None, :]
+            L = jnp.where(jnp.tril(jnp.ones((c, c), bool)), jnp.exp(seg), 0.0)
+            CB = Ci @ Bi.T
+            y_intra = (CB * L) @ x
+            y_inter = jnp.exp(cu)[:, None] * (Ci @ state.T)
+            total = cu[-1]
+            Sc = (x * jnp.exp(total - cu)[:, None]).T @ Bi
+            state = jnp.exp(total) * state + Sc
+            return state, y_intra + y_inter
+
+        st0 = jnp.zeros((P, N), jnp.float32)
+        st, ys = jax.lax.scan(chunk, st0, (xb, cumh, Bb, Cb))
+        return ys, st
+
+    f = jax.vmap(jax.vmap(per_bh, in_axes=(0, 0, None, None)),
+                 in_axes=(0, 0, 0, 0))
+    return f(xbar, cum, Bc, Cc)
+
+
+def moe_gmm_ref(x, w):
+    """x: (E, C, D); w: (E, D, F)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def early_exit_head_ref(h, norm_w, head_w, eps=1e-5):
+    hf = h.astype(jnp.float32)
+    var = jnp.mean(hf * hf, axis=1, keepdims=True)
+    hn = hf * jax.lax.rsqrt(var + eps) * norm_w.astype(jnp.float32)[None]
+    logits = hn @ head_w.astype(jnp.float32)
+    tok = jnp.argmax(logits, axis=1).astype(jnp.int32)
+    p = jax.nn.softmax(logits, axis=1)
+    return tok, jnp.max(p, axis=1)

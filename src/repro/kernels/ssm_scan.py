@@ -1,0 +1,96 @@
+"""Pallas TPU Mamba2 (SSD) chunked scan.
+
+Grid (B, H, NC): the chunk dim iterates sequentially, carrying the (P, N)
+state in VMEM scratch — HBM sees each input exactly once (the CUDA
+selective-scan's shared-memory recurrence re-thought as a grid-carried VMEM
+resident).  All chunk-local compute is three MXU matmuls:
+  CB = C·Bᵀ (c×c), y_intra = (CB∘L)·x̄, state update/readout (c×N)·(N×P).
+Chunk c = 128 aligns every matmul dim to the 128-lane MXU.
+
+Layouts: xbar (B, H, NC, c, P) f32, Bc/Cc (B, NC, c, N) f32 (shared across
+heads), cum (B, H, NC, c) f32 (inclusive cumsum of log-decay).
+Output: y (B, H, NC, c, P) f32 (+ final state (B, H, P, N)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(xb_ref, B_ref, C_ref, cum_ref, y_ref, st_ref, state, *, c, nc):
+    jc = pl.program_id(2)
+
+    @pl.when(jc == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    xb = xb_ref[0, 0, 0]                                  # (c, P)
+    Bc = B_ref[0, 0]                                      # (c, N)
+    Cc = C_ref[0, 0]
+    cum = cum_ref[0, 0, 0]                                # (c,)
+
+    # intra-chunk
+    seg = cum[:, None] - cum[None, :]                     # (c, c) log decay
+    tri = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    L = jnp.where(tri, jnp.exp(seg), 0.0)
+    CB = jax.lax.dot_general(Cc, Bc, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    y_intra = jax.lax.dot_general(CB * L, xb, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # inter-chunk: y_inter = exp(cum) * C @ state^T ; state (P, N)
+    y_inter = jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cc, state[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (c, P)
+
+    y_ref[0, 0, 0] = y_intra + y_inter
+
+    # state update: S = exp(total) * S + sum_j decay_end_j * xb_j B_j^T
+    total = cum[c - 1]
+    decay_end = jnp.exp(total - cum)                      # (c,)
+    Sc = jax.lax.dot_general(xb * decay_end[:, None], Bc,
+                             (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (P, N)
+    state[...] = jnp.exp(total) * state[...] + Sc
+
+    @pl.when(jc == nc - 1)
+    def _emit_state():
+        st_ref[0, 0] = state[...]
+
+
+def ssm_chunk_scan(xbar, Bc, Cc, cum, *, interpret=None):
+    """xbar: (B,H,NC,c,P); Bc/Cc: (B,NC,c,N); cum: (B,H,NC,c).
+
+    Returns (y (B,H,NC,c,P), final_state (B,H,P,N)), all float32."""
+    B, H, NC, c, P = xbar.shape
+    N = Bc.shape[-1]
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+
+    kern = functools.partial(_kernel, c=c, nc=NC)
+    y, st = pl.pallas_call(
+        kern,
+        grid=(B, H, NC),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, c, P), lambda b, h, jc: (b, h, jc, 0, 0)),
+            pl.BlockSpec((1, 1, c, N), lambda b, h, jc: (b, jc, 0, 0)),
+            pl.BlockSpec((1, 1, c, N), lambda b, h, jc: (b, jc, 0, 0)),
+            pl.BlockSpec((1, 1, 1, c), lambda b, h, jc: (b, h, jc, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, c, P), lambda b, h, jc: (b, h, jc, 0, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, jc: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, NC, c, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xbar, Bc, Cc, cum)
+    return y, st

@@ -1,0 +1,234 @@
+"""Loop-aware analysis of optimized HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body **once**, so any scanned
+program (stacked-layer scans, flash-attention block loops, SSD chunk scans)
+is under-counted by the trip count.  This walker parses the HLO module,
+recovers trip counts from loop conditions, and multiplies through:
+
+  * flops        — exact for dot ops (2 · prod(out) · prod(contracting));
+                   elementwise excluded (VPU, not the MXU roofline term)
+  * coll         — collective bytes by op kind (output-shape proxy)
+  * hbm_bytes    — HBM traffic proxy: Σ over top-level ops of operand+output
+                   bytes (fusions are single ops, so internals don't count;
+                   parameter/tuple/gte/bitcast/constant are free)
+
+All numbers are per-device (the HLO is the partitioned per-device module).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+_DT = {"pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+       "f8e5m2": 1, "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+       "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8, "u64": 8,
+       "c64": 8, "c128": 16, "token": 0, "opaque": 0}
+
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*"
+    r"(?P<shape>\([^)]*\)|\S+)\s+"
+    r"(?P<kind>[\w\-]+)\((?P<rest>.*)$")
+_COMP = re.compile(r"^(?:ENTRY\s+)?%(?P<name>[\w.\-]+)\s*\(")
+_CALLS = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_CONST = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_FREE = {"parameter", "tuple", "get-tuple-element", "bitcast", "constant",
+         "after-all", "partition-id", "replica-id", "iota"}
+
+
+def _bytes_of(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(shape_text):
+        if dt not in _DT:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += int(n * _DT[dt])
+    return total
+
+
+def _dims_of(shape_text: str):
+    m = _SHAPE.search(shape_text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.hbm_bytes += mult * other.hbm_bytes
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + mult * v
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.comps: Dict[str, List[dict]] = {}
+        self.entry = None
+        self._parse(text)
+        self._memo: Dict[str, Cost] = {}
+        self._slice_memo: Dict[str, tuple] = {}
+
+    def _parse(self, text: str):
+        cur = None
+        for line in text.splitlines():
+            if line.startswith("}"):
+                cur = None
+                continue
+            mc = _COMP.match(line)
+            if mc and line.rstrip().endswith("{") and "->" in line:
+                cur = mc.group("name")
+                self.comps[cur] = []
+                if line.startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            mo = _OP.match(line)
+            if not mo:
+                continue
+            rest = mo.group("rest")
+            close = rest.find(")")
+            operand_text = rest[:close if close >= 0 else len(rest)]
+            self.comps[cur].append({
+                "name": mo.group("name"),
+                "shape": mo.group("shape"),
+                "kind": mo.group("kind"),
+                "operands": re.findall(r"%([\w.\-]+)", operand_text),
+                "attrs": rest[close + 1:] if close >= 0 else "",
+                "line": line,
+            })
+
+    # ------------------------------------------------------------------
+    def _trip_count(self, cond_name: str) -> int:
+        ops = self.comps.get(cond_name, [])
+        consts = []
+        for op in ops:
+            consts += [int(c) for c in _CONST.findall(op["line"])]
+        return max(consts) if consts else 1
+
+    def _dot_flops(self, op, symtab) -> float:
+        out = 1
+        for d in _dims_of(op["shape"]):
+            out *= d
+        lhs_shape = symtab.get(op["operands"][0]) if op["operands"] else None
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op["line"])
+        contract = 1
+        if lhs_shape and m:
+            ld = _dims_of(lhs_shape)
+            for i in m.group(1).split(","):
+                if i and int(i) < len(ld):
+                    contract *= ld[int(i)]
+        return 2.0 * out * contract
+
+    def _slice_kinds(self, comp_name: str):
+        """(has_dynamic_slice, has_dynamic_update_slice) incl. nested calls."""
+        if comp_name in self._slice_memo:
+            return self._slice_memo[comp_name]
+        self._slice_memo[comp_name] = (False, False)
+        ds = dus = False
+        for op in self.comps.get(comp_name, []):
+            if op["kind"] in ("dynamic-slice", "gather"):
+                ds = True
+            if op["kind"] in ("dynamic-update-slice", "scatter"):
+                dus = True
+            if op["kind"] in ("fusion", "call"):
+                m = _CALLS.search(op["line"])
+                if m and m.group(1) in self.comps:
+                    d2, u2 = self._slice_kinds(m.group(1))
+                    ds, dus = ds or d2, dus or u2
+        self._slice_memo[comp_name] = (ds, dus)
+        return ds, dus
+
+    def _op_hbm_bytes(self, op, symtab) -> float:
+        """Traffic model for one top-level op.
+
+        Slice-aware: a dynamic-slice/gather reads only ~its output; an
+        in-place dynamic-update-slice (cache write) moves ~2x the update,
+        not the whole aliased buffer.  Everything else: operands + output.
+        """
+        kind = op["kind"]
+        if kind == "convert":
+            # XLA:CPU materializes bf16<->f32 upcasts of whole buffers; on
+            # TPU bf16 is native and converts fuse into consumers — free.
+            return 0.0
+        out_b = _bytes_of(op["shape"])
+        in_bs = [_bytes_of(symtab.get(o, "")) for o in op["operands"]]
+        ds = kind in ("dynamic-slice", "gather")
+        dus = kind in ("dynamic-update-slice", "scatter")
+        if kind in ("fusion", "call"):
+            m = _CALLS.search(op["line"])
+            if m:
+                d2, u2 = self._slice_kinds(m.group(1))
+                ds, dus = ds or d2, dus or u2
+        if dus and any(b == out_b for b in in_bs):
+            # in-place update of an aliased buffer: count the small operands
+            # twice (read-modify-write of the touched region)
+            return 2.0 * sum(b for b in in_bs if b != out_b)
+        if ds:
+            # sliced read: the big source is touched only output-wide
+            return out_b + sum(b for b in in_bs if b <= 4 * out_b)
+        return out_b + sum(in_bs)
+
+    def cost_of(self, comp_name: str) -> Cost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        total = Cost()
+        self._memo[comp_name] = total          # break cycles defensively
+        ops = self.comps.get(comp_name, [])
+        symtab = {op["name"]: op["shape"] for op in ops}
+        for op in ops:
+            kind = op["kind"]
+            attrs = op["attrs"] + op["line"]
+            if kind == "while":
+                body = None
+                mb = re.search(r"body=%?([\w.\-]+)", op["line"])
+                mcnd = _COND.search(op["line"])
+                if mb:
+                    body = mb.group(1)
+                trip = self._trip_count(mcnd.group(1)) if mcnd else 1
+                if body in self.comps:
+                    total.add(self.cost_of(body), mult=trip)
+                continue
+            if kind in ("fusion", "call", "async-start"):
+                mcall = _CALLS.search(op["line"])
+                if mcall and mcall.group(1) in self.comps:
+                    sub = self.cost_of(mcall.group(1))
+                    total.flops += sub.flops
+                    for k, v in sub.coll.items():
+                        total.coll[k] = total.coll.get(k, 0.0) + v
+                # HBM: the fusion op itself moves operands+output
+            if kind == "dot":
+                total.flops += self._dot_flops(op, symtab)
+            base = kind.replace("-start", "")
+            if base in COLLECTIVES:
+                b = _bytes_of(op["shape"])
+                total.coll[base] = total.coll.get(base, 0.0) + b
+            if kind in _FREE or kind.endswith("-done"):
+                continue
+            total.hbm_bytes += self._op_hbm_bytes(op, symtab)
+        self._memo[comp_name] = total
+        return total
+
+
+def analyse_hlo(text: str) -> dict:
+    mod = HloModule(text)
+    if mod.entry is None:
+        return {"error": "no ENTRY computation found"}
+    c = mod.cost_of(mod.entry)
+    return {"flops": c.flops, "hbm_bytes": c.hbm_bytes,
+            "collectives": {k: int(v) for k, v in sorted(c.coll.items())},
+            "collective_bytes": int(sum(c.coll.values()))}

@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+Single pod:  (16, 16) = 256 chips, axes ("data", "model")   — TPU v5e pod.
+Multi-pod:   (2, 16, 16) = 512 chips, axes ("pod", "data", "model");
+             the "pod" axis is pure data-parallel (DCN-friendly: only the
+             gradient all-reduce crosses pods).
+
+Defined as functions so importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax (launch/dryrun.py does this)")
+    import numpy as np
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_host_mesh(*, data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (CPU tests)."""
+    import numpy as np
+    n = data * model
+    dev = np.asarray(jax.devices()[:n]).reshape((data, model))
+    return jax.sharding.Mesh(dev, ("data", "model"))
+
+
+# TPU v5e per-chip hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link

@@ -1,0 +1,81 @@
+"""Input shape cells: ShapeDtypeStruct stand-ins for every (arch × shape).
+
+Weak-type-correct, shardable, no device allocation — consumed by
+``jax.jit(...).lower()`` in the dry-run and by the benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig, build_plan
+
+S = jax.ShapeDtypeStruct
+
+SHAPES = {
+    #                 seq      global_batch  mode
+    "train_4k":     (4_096,    256,          "train"),
+    "prefill_32k":  (32_768,   32,           "prefill"),
+    "decode_32k":   (32_768,   128,          "decode"),
+    "long_500k":    (524_288,  1,            "decode"),
+}
+
+
+def supports_cell(cfg: ModelConfig, shape_name: str) -> bool:
+    """long_500k only for sub-quadratic-decode archs (DESIGN.md §5)."""
+    if shape_name != "long_500k":
+        return True
+    if cfg.family in ("hybrid_mamba", "xlstm"):
+        return True
+    return cfg.sliding_window > 0          # SWA ring cache bounds KV
+
+
+def skip_reason(cfg: ModelConfig, shape_name: str) -> str:
+    if supports_cell(cfg, shape_name):
+        return ""
+    if cfg.family == "encdec":
+        return "enc-dec: architecture context << 500k"
+    return "pure full attention: 500k decode KV is quadratic-era; skipped per assignment"
+
+
+def batch_structs(cfg: ModelConfig, seq: int, batch: int, mode: str):
+    """ShapeDtypeStructs for the model input batch."""
+    emb_dt = jnp.dtype(cfg.dtype)
+    d = {}
+    if cfg.family == "vlm":
+        d["tokens"] = S((batch, seq - cfg.frontend_len), jnp.int32)
+        d["patches"] = S((batch, cfg.frontend_len, cfg.d_model), emb_dt)
+    else:
+        d["tokens"] = S((batch, seq), jnp.int32)
+    if cfg.family == "encdec":
+        d["frames"] = S((batch, cfg.encoder_len, cfg.d_model), emb_dt)
+    if mode == "train":
+        d["labels"] = S(d["tokens"].shape, jnp.int32)
+    return d
+
+
+def cache_structs(cfg: ModelConfig, batch: int, max_len: int, plan=None):
+    plan = plan or build_plan(cfg)
+    return jax.eval_shape(lambda: M.cache_init(cfg, batch, max_len, plan))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """Full abstract inputs for the step function of this cell.
+
+    train  -> {"batch": ...}
+    prefill-> {"batch": ..., "cache": ...}
+    decode -> {"tokens": (B,1), "pos": scalar, "cache": ...}
+    """
+    seq, batch, mode = SHAPES[shape_name]
+    plan = build_plan(cfg)
+    if mode == "train":
+        return {"batch": batch_structs(cfg, seq, batch, mode)}
+    if mode == "prefill":
+        return {"batch": batch_structs(cfg, seq, batch, mode),
+                "cache": cache_structs(cfg, batch, seq, plan)}
+    if mode == "decode":
+        return {"tokens": S((batch, 1), jnp.int32),
+                "pos": S((), jnp.int32),
+                "cache": cache_structs(cfg, batch, seq, plan)}
+    raise ValueError(mode)

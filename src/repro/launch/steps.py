@@ -1,0 +1,163 @@
+"""Step functions: train_step (multi-exit loss + AdamW) and serve steps.
+
+These are the functions lowered by the dry-run and executed by the examples.
+The multi-exit weighted CE is the paper's dynamic-DNN joint training — every
+submodel's ExtNet head learns simultaneously (Sec. III / MSDNet-style).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig, build_plan
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update
+
+AUX_WEIGHT = 0.01   # MoE load-balance loss weight
+
+
+def cross_entropy(logits, labels):
+    """logits (B,S,V) any float dtype; labels (B,S) int32 (−1 = ignore).
+
+    The gold logit is selected with an iota comparison instead of
+    ``take_along_axis`` so the reduction partitions cleanly when V is sharded
+    over "model" (a sharded-gather here replicates the batch under GSPMD)."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, lg.shape, len(lg.shape) - 1)
+    gold = jnp.sum(jnp.where(iota == labels[..., None], lg, 0.0), axis=-1)
+    tok_loss = lse - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(tok_loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _pick_chunk(n: int, target: int) -> int:
+    for d in range(min(n, target), 0, -1):
+        if n % d == 0:
+            return d
+    return n
+
+
+def chunked_exit_ce(cfg, head_params, h, labels, chunk=1024):
+    """CE from hidden states, head matmul rematerialized per sequence chunk —
+    the (B, S, V) logits tensor is never materialized (MaxText-style)."""
+    from repro.distribution.sharding import hint
+    from repro.models.layers import exit_head_fwd
+    if cfg.family == "vlm":
+        h = h[:, cfg.frontend_len:, :]
+    B, S, D = h.shape
+    c = _pick_chunk(S, chunk)
+    nc = S // c
+    if nc == 1:
+        lg = hint(exit_head_fwd(cfg, head_params, h), "batch", None, "model")
+        return cross_entropy(lg, labels)
+    hc = h.reshape(B, nc, c, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, c).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        s, n = carry
+        hcb, lab = xs
+        lg = hint(exit_head_fwd(cfg, head_params, hcb), "batch", None, "model")
+        lgf = lg.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lgf, axis=-1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, lgf.shape, 2)
+        gold = jnp.sum(jnp.where(iota == lab[..., None], lgf, 0.0), axis=-1)
+        mask = (lab >= 0).astype(jnp.float32)
+        return (s + jnp.sum((lse - gold) * mask), n + jnp.sum(mask)), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    (s, n), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (hc, lc))
+    return s / jnp.maximum(n, 1.0)
+
+
+def make_loss_fn(cfg: ModelConfig, plan=None):
+    plan = plan or build_plan(cfg)
+    wsum = sum(cfg.exit_loss_weights)
+
+    def loss_fn(params, batch):
+        labels = batch["labels"]
+
+        def consume(j, h):
+            return chunked_exit_ce(cfg, params["exits"][j], h, labels)
+
+        per_exit, aux = M.apply_train(cfg, params, batch, plan, consume=consume)
+        total = sum(w * ce for w, ce in zip(cfg.exit_loss_weights, per_exit))
+        loss = total / wsum + AUX_WEIGHT * aux
+        return loss, {"ce_per_exit": jnp.stack(per_exit), "aux": aux}
+
+    return loss_fn
+
+
+def init_train_state(cfg: ModelConfig, key):
+    params = M.init(cfg, key)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def make_train_step(cfg: ModelConfig, oc: AdamWConfig = AdamWConfig(),
+                    plan=None, microbatches: int = 0):
+    plan = plan or build_plan(cfg)
+    loss_fn = make_loss_fn(cfg, plan)
+    mb = microbatches or cfg.train_microbatches
+
+    def grad_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if mb <= 1:
+            (loss, extras), grads = grad_of(params, batch)
+        else:
+            # gradient accumulation: scan over microbatch indices, slicing
+            # the (integer) batch per step — slicing raw tokens keeps GSPMD
+            # away from re-partitioning hoisted embedding gathers
+            B = jax.tree.leaves(batch)[0].shape[0]
+            size = B // mb
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+
+            def body(carry, i):
+                gsum, lsum, esum = carry
+                micro = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * size, size, axis=0), batch)
+                (l, e), g = grad_of(params, micro)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                esum = jax.tree.map(lambda a, b: a + b, esum, e)
+                return (gsum, lsum + l, esum), None
+
+            e0 = {"ce_per_exit": jnp.zeros((cfg.n_exits,), jnp.float32),
+                  "aux": jnp.float32(0)}
+            (gsum, lsum, esum), _ = jax.lax.scan(
+                body, (g0, jnp.float32(0), e0), jnp.arange(mb))
+            grads = jax.tree.map(lambda g: g / mb, gsum)
+            loss = lsum / mb
+            extras = jax.tree.map(lambda e: e / mb, esum)
+        params, opt, om = adamw_update(oc, state["params"], grads, state["opt"])
+        metrics = {"loss": loss, **extras, **om}
+        return {"params": params, "opt": opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, exit_idx: int = -1, plan=None):
+    plan = plan or build_plan(cfg)
+
+    def prefill_step(params, batch, cache):
+        return M.prefill(cfg, params, batch, cache, exit_idx=exit_idx,
+                         plan=plan)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, exit_idx: int = -1, plan=None):
+    plan = plan or build_plan(cfg)
+
+    def decode_step(params, tokens, pos, cache):
+        logits, cache = M.decode(cfg, params, tokens, pos, cache,
+                                 exit_idx=exit_idx, plan=plan)
+        return logits, cache
+
+    return decode_step

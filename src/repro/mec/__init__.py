@@ -1,0 +1,1 @@
+from repro.mec.scenario import MECConfig, Scenario  # noqa: F401

@@ -1,0 +1,77 @@
+"""Dynamic-DNN catalog: submodel attributes (r_h, p_h, c_h, D_m).
+
+Two sources:
+  * the paper's own measurements (ViT, Tables II & III) — model type 0 is
+    ViT exactly; types 1..M-1 are deterministic size-jittered variants
+    (the paper uses 8 ViT/Swin-class types but publishes only ViT's table);
+  * derived catalogs from the real architecture zoo via
+    ``models.partition.catalog_entry`` (sizes/FLOPs from the actual configs),
+    used by the framework-scale serving examples.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.vit_edge import VIT_LOAD_S, VIT_SUBMODELS
+
+
+def paper_catalog(n_models: int = 8, seed: int = 7):
+    """Returns (sizes (M,H+1) MB, prec (M,H+1), flops (M,H+1) GFLOP/request,
+    loadD (M,H+1,H+1) seconds)."""
+    H = len(VIT_SUBMODELS)
+    rng = np.random.default_rng(seed)
+    # 0.5..1.4: the catalog spans ~87..480 MB submodels, so the smallest
+    # submodels fit the paper's 100 MB low-capacity operating point (Fig 12)
+    factors = np.concatenate([[1.0], rng.uniform(0.5, 1.4, n_models - 1)])
+
+    sizes = np.zeros((n_models, H + 1))
+    prec = np.zeros((n_models, H + 1))
+    flops = np.zeros((n_models, H + 1))
+    loadD = np.zeros((n_models, H + 1, H + 1))
+    base_load = np.asarray(VIT_LOAD_S)                     # (H+1, H)
+
+    for m, f in enumerate(factors):
+        for j, sub in enumerate(VIT_SUBMODELS):
+            sizes[m, j + 1] = sub["memory_mb"] * f
+            flops[m, j + 1] = sub["gflops"] * f
+            dp = rng.uniform(-0.015, 0.015) if m else 0.0
+            prec[m, j + 1] = min(sub["precision"] + dp, 0.999)
+        # loading/switch times scale with the transferred bytes
+        loadD[m, :, 1:] = base_load * f
+        # switching down / evicting is (nearly) free (paper Sec. VI)
+        loadD[m, 1:, 0] = 0.0
+    return sizes, prec, flops, loadD
+
+
+def zoo_catalog(arch_ids, ctx: int = 2048, mem_rate_mbps: float = 2024.0):
+    """Catalog derived from the real architecture zoo (framework scale).
+
+    mem_rate is the secondary-storage->memory load rate implied by the
+    paper's Table III (~253 MB/s)."""
+    from repro import configs
+    from repro.models import partition
+
+    cfgs = [configs.get_config(a) for a in arch_ids]
+    H = max(c.n_exits for c in cfgs)
+    M = len(cfgs)
+    sizes = np.zeros((M, H + 1))
+    prec = np.zeros((M, H + 1))
+    flops = np.zeros((M, H + 1))
+    loadD = np.zeros((M, H + 1, H + 1))
+    rate = mem_rate_mbps / 8.0 * 1e6                        # bytes/s
+    for m, cfg in enumerate(cfgs):
+        entries = partition.catalog_entry(cfg, ctx)
+        # depth-quality curve: saturating toward a per-arch ceiling
+        for j, e in enumerate(entries):
+            frac = cfg.exit_layers[j] / cfg.n_layers
+            sizes[m, j + 1] = e["r_h"] / 1e6                # MB
+            prec[m, j + 1] = 0.99 * (1 - 0.45 * (1 - frac) ** 1.5)
+            flops[m, j + 1] = e["c_h"] / 1e9                # GFLOP/token
+        for prev in range(H + 1):
+            for tgt in range(1, H + 1):
+                if tgt >= prev:
+                    delta = sizes[m, tgt] - (sizes[m, prev] if prev else 0.0)
+                    loadD[m, prev, tgt] = delta * 1e6 / rate * 8.0 + 0.01
+                else:
+                    loadD[m, prev, tgt] = 0.042             # prune overhead
+    return sizes, prec, flops, loadD

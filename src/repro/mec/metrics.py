@@ -1,0 +1,62 @@
+"""Evaluation metrics (paper Sec. VII-B) + post-hoc feasibility enforcement.
+
+All algorithms are evaluated identically: a routed request only counts as a
+hit if its end-to-end latency fits ddl_u AND the model finished loading
+before the request's initiation time s_u — baselines that ignored loading
+time in their decisions lose those requests here (exactly the paper's
+evaluation protocol).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.jdcr import JDCRInstance
+
+
+def enforce(inst: JDCRInstance, x, A):
+    """Zero out routes that are infeasible at execution time."""
+    A = np.array(A, dtype=np.float64)
+    x_sel = x[:, inst.m_u, 1:]
+    A = A * (x_sel > 0)
+    # one route per user, best precision
+    prec_u = inst.prec[inst.m_u, 1:]
+    for u in np.nonzero(A.sum(axis=(0, 2)) > 1)[0]:
+        nz = np.argwhere(A[:, u, :] > 0)
+        best = max(nz, key=lambda nh: prec_u[u, nh[1]])
+        A[:, u, :] = 0
+        A[best[0], u, best[1]] = 1
+    lat = np.einsum("nuh,nuh->u", A, inst.e2e_latency())
+    load = np.einsum("nuh,nuh->u", A, inst.load_latency())
+    bad = (lat > inst.ddl + 1e-9) | (load > inst.s_u + 1e-9)
+    A[:, bad, :] = 0.0
+    return A
+
+
+def window_metrics(inst: JDCRInstance, x, A):
+    A = enforce(inst, x, A)
+    prec_u = inst.prec[inst.m_u, 1:]
+    served = A.sum(axis=(0, 2)) > 0
+    precision = float(np.sum(A * prec_u[None]))
+    mem_used = np.sum(x * inst.sizes[None], axis=(1, 2))
+    return {
+        "precision_sum": precision,
+        "hits": int(served.sum()),
+        "users": inst.U,
+        "avg_precision": precision / inst.U,
+        "hit_rate": served.mean(),
+        "mem_util": float(np.mean(mem_used / inst.R)),
+    }
+
+
+def aggregate(window_results):
+    users = sum(r["users"] for r in window_results)
+    return {
+        "avg_precision": sum(r["precision_sum"] for r in window_results) / users,
+        "hit_rate": sum(r["hits"] for r in window_results) / users,
+        "mem_util": float(np.mean([r["mem_util"] for r in window_results])),
+    }
+
+
+def qoe(prec, latency, theta, alpha=0.9):
+    """Paper Eq. 40."""
+    return prec * max(0.0, 1.0 - (latency - theta) * alpha)

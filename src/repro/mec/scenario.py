@@ -1,0 +1,124 @@
+"""MEC scenario: topology + request traces + window-by-window instances
+(paper Sec. VII-A settings by default).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.jdcr import JDCRInstance
+from repro.mec.catalog import paper_catalog
+
+
+@dataclass
+class MECConfig:
+    n_bs: int = 5
+    n_users: int = 600
+    n_models: int = 8
+    window_s: float = 3.0
+    n_windows: int = 10
+    zipf: float = 0.8
+    mem_capacity_mb: float = 500.0
+    compute_gflops: float = 70.0
+    wireless_mbps: float = 20.0        # user -> home BS
+    wired_mbps: float = 100.0          # BS <-> BS
+    cloud_mbps: float = 800.0          # cloud -> BS (online downloads)
+    hop_latency_s: float = 0.01
+    er_prob: float = 0.5
+    data_mb: float = 0.144
+    ddl_s: float = 0.3
+    popularity_change_every: int = 0   # in windows; 0 = static popularity
+    seed: int = 0
+
+
+def _er_connected(n, p, rng):
+    """Erdős–Rényi graph, re-drawn until connected."""
+    while True:
+        adj = rng.random((n, n)) < p
+        adj = np.triu(adj, 1)
+        adj = adj | adj.T
+        # BFS hop counts
+        hops = np.full((n, n), np.inf)
+        for s in range(n):
+            hops[s, s] = 0
+            frontier = [s]
+            d = 0
+            while frontier:
+                d += 1
+                nxt = []
+                for v in frontier:
+                    for w in np.nonzero(adj[v])[0]:
+                        if hops[s, w] == np.inf:
+                            hops[s, w] = d
+                            nxt.append(w)
+                frontier = nxt
+        if np.isfinite(hops).all():
+            return adj, hops.astype(int)
+
+
+def zipf_popularity(n, a, rng):
+    if a <= 0:
+        p = np.ones(n)
+    else:
+        p = 1.0 / np.arange(1, n + 1) ** a
+    p = p / p.sum()
+    return p[rng.permutation(n)]
+
+
+class Scenario:
+    """Holds the static topology and generates per-window JDCR instances."""
+
+    def __init__(self, cfg: MECConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        self.rng = rng
+        N, M = cfg.n_bs, cfg.n_models
+        self.sizes, self.prec, self.flops_req, self.loadD = \
+            paper_catalog(M, seed=cfg.seed + 7)
+        # flops per data unit (paper c_h): Table II is GFLOP per request of
+        # size d_u, so c_h = GFLOP / d_u per MB
+        self.flops = self.flops_req / cfg.data_mb
+        self.adj, self.hops = _er_connected(N, cfg.er_prob, rng)
+        mbps = 1.0 / 8.0                                    # Mb -> MB
+        self.phi = np.full(N, cfg.wireless_mbps * mbps)     # MB/s
+        self.wired = np.where(np.eye(N, dtype=bool), np.inf,
+                              cfg.wired_mbps * mbps)
+        # propagation: round trip = 2 wireless legs + 2 * hops wired legs
+        self.lam = cfg.hop_latency_s * (2.0 + 2.0 * self.hops)
+        self.R = np.full(N, cfg.mem_capacity_mb)
+        self.C = np.full(N, cfg.compute_gflops)
+        self.pop = zipf_popularity(M, cfg.zipf, rng)
+
+    def empty_cache(self):
+        x = np.zeros((self.cfg.n_bs, self.cfg.n_models,
+                      self.sizes.shape[1]))
+        x[:, :, 0] = 1.0
+        return x
+
+    def maybe_reshuffle_popularity(self, window: int):
+        ce = self.cfg.popularity_change_every
+        if ce and window > 0 and window % ce == 0:
+            self.pop = self.pop[self.rng.permutation(len(self.pop))]
+
+    def draw_requests(self, n_users=None):
+        cfg = self.cfg
+        U = n_users or cfg.n_users
+        m_u = self.rng.choice(cfg.n_models, size=U, p=self.pop)
+        home = self.rng.integers(0, cfg.n_bs, size=U)
+        s_u = self.rng.uniform(0.0, cfg.window_s, size=U)
+        return m_u, home, s_u
+
+    def instance(self, window: int, x_prev, n_users=None) -> JDCRInstance:
+        cfg = self.cfg
+        self.maybe_reshuffle_popularity(window)
+        m_u, home, s_u = self.draw_requests(n_users)
+        U = len(m_u)
+        wired = np.where(np.isinf(self.wired), 1e12, self.wired)
+        return JDCRInstance(
+            sizes=self.sizes, prec=self.prec, flops=self.flops,
+            loadD=self.loadD, R=self.R, C=self.C, phi=self.phi,
+            wired=wired, lam=self.lam,
+            m_u=m_u, d_u=np.full(U, cfg.data_mb),
+            ddl=np.full(U, cfg.ddl_s), s_u=s_u, home=home,
+            x_prev=np.asarray(x_prev, dtype=np.float64))

@@ -1,0 +1,3 @@
+# Intentionally import-light: submodules import each other and
+# repro.distribution; a fat package __init__ creates cycles.
+from repro.models.config import ModelConfig, Plan, Segment, build_plan, submodel_plan  # noqa: F401

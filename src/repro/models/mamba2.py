@@ -1,0 +1,199 @@
+"""Mamba2 (SSD) layer: chunked state-space scan, TPU-friendly.
+
+The chunked (state-space-dual) formulation expresses almost all compute as
+chunk-local matmuls (MXU-friendly, honest HLO FLOPs) plus a tiny inter-chunk
+``lax.scan`` carrying the (H, P, N) state.  Decode is the O(1) recurrence.
+
+Projections are kept *separate* (z / x / B / C / dt) rather than fused, so
+each output dim shards cleanly: x,z over "model" (head-aligned: I = H·P),
+B/C/dt small (replicated out-dim).  This is a TPU-sharding adaptation of the
+reference CUDA layout, which fuses them for kernel-launch reasons that do not
+apply here.
+
+Shapes: B batch, S seq, D d_model, I=d_inner, H ssm heads, P head_dim,
+N d_state, c chunk.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import pdtype, rms_norm
+
+
+def mamba_init(key, cfg: ModelConfig):
+    D, I, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    K = cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    sd = D ** -0.5
+    return {
+        "z_proj": (jax.random.normal(ks[0], (D, I)) * sd).astype(pdtype(cfg)),
+        "x_proj": (jax.random.normal(ks[1], (D, I)) * sd).astype(pdtype(cfg)),
+        "B_proj": (jax.random.normal(ks[2], (D, N)) * sd).astype(pdtype(cfg)),
+        "C_proj": (jax.random.normal(ks[3], (D, N)) * sd).astype(pdtype(cfg)),
+        "dt_proj": (jax.random.normal(ks[4], (D, H)) * sd).astype(pdtype(cfg)),
+        "conv_x": (jax.random.normal(jax.random.fold_in(key, 7), (K, I)) * 0.1
+                   ).astype(pdtype(cfg)),
+        "conv_B": (jax.random.normal(jax.random.fold_in(key, 8), (K, N)) * 0.1
+                   ).astype(pdtype(cfg)),
+        "conv_C": (jax.random.normal(jax.random.fold_in(key, 9), (K, N)) * 0.1
+                   ).astype(pdtype(cfg)),
+        "conv_bx": jnp.zeros((I,), pdtype(cfg)),
+        "conv_bB": jnp.zeros((N,), pdtype(cfg)),
+        "conv_bC": jnp.zeros((N,), pdtype(cfg)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": jnp.ones((I,), pdtype(cfg)),
+        "out_proj": (jax.random.normal(ks[5], (I, D)) * I ** -0.5).astype(pdtype(cfg)),
+    }
+
+
+def _causal_conv(x, w, b, K):
+    """Depthwise causal conv over time. x: (B, S, C)."""
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    wc = w.astype(x.dtype)
+    out = sum(pad[:, i:i + x.shape[1], :] * wc[i][None, None, :] for i in range(K))
+    return jax.nn.silu(out + b.astype(x.dtype))
+
+
+def _ssd_inputs(cfg, p, x):
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    B_, S, _ = x.shape
+    K = cfg.ssm_conv
+    z = x @ p["z_proj"].astype(x.dtype)
+    xr = _causal_conv(x @ p["x_proj"].astype(x.dtype), p["conv_x"], p["conv_bx"], K)
+    Bs = _causal_conv(x @ p["B_proj"].astype(x.dtype), p["conv_B"], p["conv_bB"], K)
+    Cs = _causal_conv(x @ p["C_proj"].astype(x.dtype), p["conv_C"], p["conv_bC"], K)
+    xs = xr.reshape(B_, S, H, P)
+    dt = jax.nn.softplus((x @ p["dt_proj"].astype(x.dtype)).astype(jnp.float32)
+                         + p["dt_bias"])                                 # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                             # (H,)
+    la = dt * A[None, None, :]                                           # log decay
+    xbar = xs.astype(jnp.float32) * dt[..., None]                        # (B,S,H,P)
+    return z, xs, Bs, Cs, la, xbar
+
+
+def mamba_fwd(cfg: ModelConfig, p, x, state0=None, return_state=False):
+    """Full-sequence SSD. x: (B,S,D). state0: optional (B,H,P,N) carry-in."""
+    c = cfg.ssm_chunk
+    B_, S, D = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    z, xs, Bs, Cs, la, xbar = _ssd_inputs(cfg, p, x)
+
+    # pad to a chunk multiple: log-decay 0 (a=1) and zero inputs leave the
+    # carried state untouched; padded outputs are sliced away
+    S0 = S
+    if S % c:
+        pad = c - S % c
+        padt = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        Bs, Cs, la, xbar = padt(Bs), padt(Cs), padt(la), padt(xbar)
+        xs = padt(xs)
+        S = S + pad
+    NC = S // c
+
+    lac = la.reshape(B_, NC, c, H)
+    cum = jnp.cumsum(lac, axis=2)                                        # inclusive
+    Bc = Bs.reshape(B_, NC, c, N).astype(jnp.float32)
+    Cc = Cs.reshape(B_, NC, c, N).astype(jnp.float32)
+    xbc = xbar.reshape(B_, NC, c, H, P)
+
+    # ---- intra-chunk (quadratic in c, matmul-heavy) ----
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]                  # (B,NC,i,j,H)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    CB = jnp.einsum("bniN,bnjN->bnij", Cc, Bc)                           # (B,NC,c,c)
+    scores = CB[:, :, :, :, None] * L                                    # (B,NC,i,j,H)
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", scores, xbc)
+
+    # ---- chunk states + inter-chunk carry ----
+    total = cum[:, :, -1, :]                                             # (B,NC,H)
+    decay_end = jnp.exp(total[:, :, None, :] - cum)                      # (B,NC,c,H)
+    S_chunk = jnp.einsum("bnjh,bnjN,bnjhp->bnhpN", decay_end, Bc, xbc)
+
+    def carry(s, inp):
+        tot, sc = inp
+        s_next = jnp.exp(tot)[:, :, None, None] * s + sc
+        return s_next, s
+
+    s0 = (jnp.zeros((B_, H, P, N), jnp.float32) if state0 is None
+          else state0.astype(jnp.float32))
+    s_final, s_prev = jax.lax.scan(
+        carry, s0, (total.transpose(1, 0, 2), S_chunk.transpose(1, 0, 2, 3, 4)))
+    s_prev = s_prev.transpose(1, 0, 2, 3, 4)                             # (B,NC,H,P,N)
+
+    decay_pre = jnp.exp(cum)                                             # (B,NC,c,H)
+    y_inter = jnp.einsum("bnih,bniN,bnhpN->bnihp", decay_pre, Cc, s_prev)
+
+    y = (y_intra + y_inter).reshape(B_, S, H, P)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B_, S, cfg.d_inner)[:, :S0].astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    if return_state:
+        return out, s_final
+    return out
+
+
+def mamba_cache_init(cfg: ModelConfig, B, dtype=jnp.float32):
+    H, P, N, I, K = (cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state,
+                     cfg.d_inner, cfg.ssm_conv)
+    return {"conv_x": jnp.zeros((B, K - 1, I), dtype),
+            "conv_B": jnp.zeros((B, K - 1, N), dtype),
+            "conv_C": jnp.zeros((B, K - 1, N), dtype),
+            "state": jnp.zeros((B, H, P, N), jnp.float32)}
+
+
+def mamba_prefill(cfg, p, x):
+    """Run full fwd and also emit the decode cache."""
+    out, s_final = mamba_fwd(cfg, p, x, return_state=True)
+    K = cfg.ssm_conv
+    tail = slice(-(K - 1), None)
+    cache = {
+        "conv_x": (x @ p["x_proj"].astype(x.dtype))[:, tail, :].astype(jnp.float32),
+        "conv_B": (x @ p["B_proj"].astype(x.dtype))[:, tail, :].astype(jnp.float32),
+        "conv_C": (x @ p["C_proj"].astype(x.dtype))[:, tail, :].astype(jnp.float32),
+        "state": s_final,
+    }
+    return out, cache
+
+
+def _conv_step(window, w, b):
+    """window: (B, K, C) -> (B, C)."""
+    out = jnp.sum(window * w[None, :, :].astype(window.dtype), axis=1)
+    return jax.nn.silu(out + b.astype(window.dtype))
+
+
+def mamba_decode(cfg: ModelConfig, p, x1, cache):
+    """One-token recurrence. x1: (B,1,D)."""
+    I, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    B_ = x1.shape[0]
+    xt = x1[:, 0]
+    z = xt @ p["z_proj"].astype(x1.dtype)
+    xn = (xt @ p["x_proj"].astype(x1.dtype)).astype(jnp.float32)
+    Bn = (xt @ p["B_proj"].astype(x1.dtype)).astype(jnp.float32)
+    Cn = (xt @ p["C_proj"].astype(x1.dtype)).astype(jnp.float32)
+    wx = jnp.concatenate([cache["conv_x"], xn[:, None]], axis=1)         # (B,K,I)
+    wB = jnp.concatenate([cache["conv_B"], Bn[:, None]], axis=1)
+    wC = jnp.concatenate([cache["conv_C"], Cn[:, None]], axis=1)
+    xc = _conv_step(wx, p["conv_x"].astype(jnp.float32), p["conv_bx"])
+    Bc = _conv_step(wB, p["conv_B"].astype(jnp.float32), p["conv_bB"])
+    Cc = _conv_step(wC, p["conv_C"].astype(jnp.float32), p["conv_bC"])
+    xs = xc.reshape(B_, H, P)
+    dt = jax.nn.softplus((xt @ p["dt_proj"].astype(x1.dtype)).astype(jnp.float32)
+                         + p["dt_bias"])                                 # (B,H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A[None, :])                                         # (B,H)
+    xbar = xs * dt[..., None]                                            # (B,H,P)
+    s = cache["state"] * a[:, :, None, None] + \
+        jnp.einsum("bhp,bN->bhpN", xbar, Bc)
+    y = jnp.einsum("bN,bhpN->bhp", Cc, s) + p["D"][None, :, None] * xs
+    y = y.reshape(B_, I).astype(x1.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"].astype(x1.dtype))[:, None, :]
+    new_cache = {"conv_x": wx[:, 1:], "conv_B": wB[:, 1:], "conv_C": wC[:, 1:],
+                 "state": s}
+    return out, new_cache

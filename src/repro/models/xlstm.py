@@ -1,0 +1,233 @@
+"""xLSTM blocks: chunked mLSTM (matrix memory, linear-attention-like) and
+sLSTM (scalar memory, true recurrence), with exponential gating + stabilizers.
+
+mLSTM uses a chunkwise-parallel formulation (like SSD): intra-chunk quadratic
+matmuls + an inter-chunk ``lax.scan`` carrying (C, n, m).  Decode is the O(1)
+recurrence — which is what makes the ``long_500k`` cell feasible for this arch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import pdtype, rms_norm
+
+MINF = -1e30
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig):
+    D, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    sd = D ** -0.5
+    return {
+        "wq": (jax.random.normal(ks[0], (D, D)) * sd).astype(pdtype(cfg)),
+        "wk": (jax.random.normal(ks[1], (D, D)) * sd).astype(pdtype(cfg)),
+        "wv": (jax.random.normal(ks[2], (D, D)) * sd).astype(pdtype(cfg)),
+        "wif": (jax.random.normal(ks[3], (D, 2 * H)) * sd).astype(jnp.float32),
+        "bif": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]).astype(jnp.float32),
+        "wo": (jax.random.normal(ks[4], (D, D)) * sd).astype(pdtype(cfg)),
+        "wd": (jax.random.normal(ks[5], (D, D)) * sd).astype(pdtype(cfg)),
+        "norm": jnp.ones((D,), pdtype(cfg)),
+    }
+
+
+def _mlstm_qkvg(cfg, p, xn):
+    B, S, D = xn.shape
+    H = cfg.n_heads
+    P = D // H
+    q = (xn @ p["wq"].astype(xn.dtype)).reshape(B, S, H, P)
+    k = (xn @ p["wk"].astype(xn.dtype)).reshape(B, S, H, P)
+    v = (xn @ p["wv"].astype(xn.dtype)).reshape(B, S, H, P)
+    gif = xn.astype(jnp.float32) @ p["wif"] + p["bif"]
+    logi = gif[..., :H]                                   # log input gate
+    logf = jax.nn.log_sigmoid(gif[..., H:])               # log forget gate
+    return q, k, v, logi, logf
+
+
+def mlstm_core_chunked(q, k, v, logi, logf, chunk, state=None):
+    """q,k,v: (B,S,H,P); logi/logf: (B,S,H). Returns (h, final_state)."""
+    B, S, H, P = q.shape
+    c = min(chunk, S)
+    S0 = S
+    if S % c:
+        # pad: f=1 (logf=0) and i=0 (logi=-inf) leave the state untouched
+        pad = c - S % c
+        padt = lambda a, val=0.0: jnp.pad(
+            a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2),
+            constant_values=val)
+        q, k, v = padt(q), padt(k), padt(v)
+        logf = padt(logf)
+        logi = padt(logi, MINF)
+        S = S + pad
+    NC = S // c
+    sc = P ** -0.5
+
+    qc = q.reshape(B, NC, c, H, P).astype(jnp.float32)
+    kc = k.reshape(B, NC, c, H, P).astype(jnp.float32)
+    vc = v.reshape(B, NC, c, H, P).astype(jnp.float32)
+    lic = logi.reshape(B, NC, c, H)
+    cumf = jnp.cumsum(logf.reshape(B, NC, c, H), axis=2)  # inclusive
+
+    # intra-chunk log decay matrix  logD[i,j] = cumf_i - cumf_j + logi_j (j<=i)
+    logD = cumf[:, :, :, None, :] - cumf[:, :, None, :, :] + lic[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    logD = jnp.where(tri[None, None, :, :, None], logD, MINF)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, P, P), jnp.float32)
+        n0 = jnp.zeros((B, H, P), jnp.float32)
+        m0 = jnp.full((B, H), MINF, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    def body(carry, inp):
+        C, n, m = carry
+        qq, kk, vv, lD, cf, li = inp                      # chunk-local
+        # stabilizer per row
+        m_intra = jnp.max(lD, axis=2)                     # (B,c,H)
+        m_inter = cf + m[:, None, :]                      # (B,c,H)
+        mi = jnp.maximum(m_intra, m_inter)
+        Sij = jnp.exp(lD - mi[:, :, None, :])             # (B,i,j,H)
+        qk = jnp.einsum("bihp,bjhp->bijh", qq, kk) * sc
+        num = jnp.einsum("bijh,bijh,bjhp->bihp", qk, Sij, vv)
+        den_vec = jnp.einsum("bijh,bjhp->bihp", Sij, kk)
+        w_inter = jnp.exp(m_inter - mi)                   # (B,c,H)
+        num = num + w_inter[..., None] * jnp.einsum("bihp,bhpq->bihq", qq, C) * sc
+        den_vec = den_vec + w_inter[..., None] * n[:, None, :, :]
+        den = jnp.abs(jnp.einsum("bihp,bihp->bih", qq, den_vec)) * sc
+        h = num / jnp.maximum(den, jnp.exp(-mi))[..., None]
+
+        # carry to next chunk
+        cf_last = cf[:, -1, :]                            # (B,H)
+        dj = cf_last[:, None, :] - cf + li                # (B,c,H) decay j->end
+        m_new = jnp.maximum(cf_last + m, jnp.max(dj, axis=1))
+        wC = jnp.exp(cf_last + m - m_new)
+        wj = jnp.exp(dj - m_new[:, None, :])
+        C_new = wC[:, :, None, None] * C + jnp.einsum("bjh,bjhp,bjhq->bhpq", wj, kk, vv)
+        n_new = wC[:, :, None] * n + jnp.einsum("bjh,bjhp->bhp", wj, kk)
+        return (C_new, n_new, m_new), h
+
+    xs = (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), logD.transpose(1, 0, 2, 3, 4),
+          cumf.transpose(1, 0, 2, 3), lic.transpose(1, 0, 2, 3))
+    (Cf, nf, mf), hs = jax.lax.scan(body, (C0, n0, m0), xs)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H * P)[:, :S0]
+    return h, {"C": Cf, "n": nf, "m": mf}
+
+
+def mlstm_fwd(cfg, p, x, state=None, return_state=False):
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    q, k, v, logi, logf = _mlstm_qkvg(cfg, p, xn)
+    h, st = mlstm_core_chunked(q, k, v, logi, logf, cfg.ssm_chunk or 128, state)
+    o = jax.nn.sigmoid(xn @ p["wo"].astype(xn.dtype))
+    out = (o * h.astype(xn.dtype)) @ p["wd"].astype(xn.dtype)
+    if return_state:
+        return x + out, st
+    return x + out
+
+
+def mlstm_cache_init(cfg, B):
+    H, P = cfg.n_heads, cfg.d_model // cfg.n_heads
+    return {"C": jnp.zeros((B, H, P, P), jnp.float32),
+            "n": jnp.zeros((B, H, P), jnp.float32),
+            "m": jnp.full((B, H), MINF, jnp.float32)}
+
+
+def mlstm_decode(cfg, p, x1, cache):
+    """x1: (B,1,D) single step recurrence."""
+    xn = rms_norm(x1, p["norm"], cfg.norm_eps)
+    q, k, v, logi, logf = _mlstm_qkvg(cfg, p, xn)
+    B, _, H, P = q.shape
+    qf, kf, vf = (t[:, 0].astype(jnp.float32) for t in (q, k, v))
+    li, lf = logi[:, 0], logf[:, 0]                       # (B,H)
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(lf + m, li)
+    fi = jnp.exp(lf + m - m_new)
+    ii = jnp.exp(li - m_new)
+    C_new = fi[:, :, None, None] * C + ii[:, :, None, None] * \
+        jnp.einsum("bhp,bhq->bhpq", kf, vf)
+    n_new = fi[:, :, None] * n + ii[:, :, None] * kf
+    sc = P ** -0.5
+    num = jnp.einsum("bhp,bhpq->bhq", qf, C_new) * sc
+    den = jnp.abs(jnp.einsum("bhp,bhp->bh", qf, n_new)) * sc
+    h = (num / jnp.maximum(den, jnp.exp(-m_new))[..., None]).reshape(B, 1, H * P)
+    o = jax.nn.sigmoid(xn @ p["wo"].astype(xn.dtype))
+    out = (o * h.astype(xn.dtype)) @ p["wd"].astype(xn.dtype)
+    return x1 + out, {"C": C_new, "n": n_new, "m": m_new}
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig):
+    D, H = cfg.d_model, cfg.n_heads
+    P = D // H
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w": (jax.random.normal(k1, (D, 4 * D)) * D ** -0.5).astype(jnp.float32),
+        "r": (jax.random.normal(k2, (4, H, P, P)) * P ** -0.5).astype(jnp.float32),
+        "b": jnp.zeros((4 * D,), jnp.float32),
+        "wd": (jax.random.normal(k3, (D, D)) * D ** -0.5).astype(pdtype(cfg)),
+        "norm": jnp.ones((D,), pdtype(cfg)),
+    }
+
+
+def _slstm_step(cfg, p, gates_x, carry):
+    """gates_x: (B, 4D) input contribution; carry: dict of (B,D) f32."""
+    D, H = cfg.d_model, cfg.n_heads
+    P = D // H
+    B = gates_x.shape[0]
+    h, c, n, m = carry["h"], carry["c"], carry["n"], carry["m"]
+    hh = h.reshape(B, H, P)
+    rec = jnp.stack([jnp.einsum("bhp,hpq->bhq", hh, p["r"][g])
+                     for g in range(4)], axis=1).reshape(B, 4 * D)
+    g = gates_x + rec
+    zi, ii, ff, oo = jnp.split(g, 4, axis=-1)
+    z = jnp.tanh(zi)
+    o = jax.nn.sigmoid(oo)
+    logf = jax.nn.log_sigmoid(ff)
+    m_new = jnp.maximum(logf + m, ii)
+    i_ = jnp.exp(ii - m_new)
+    f_ = jnp.exp(logf + m - m_new)
+    c_new = f_ * c + i_ * z
+    n_new = f_ * n + i_
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+def slstm_cache_init(cfg, B):
+    D = cfg.d_model
+    z = jnp.zeros((B, D), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((B, D), -30.0, jnp.float32)}
+
+
+def slstm_fwd(cfg, p, x, state=None, return_state=False):
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    B, S, D = x.shape
+    gx = xn.astype(jnp.float32) @ p["w"] + p["b"]          # (B,S,4D)
+    carry0 = state if state is not None else slstm_cache_init(cfg, B)
+
+    def step(carry, g):
+        new = _slstm_step(cfg, p, g, carry)
+        return new, new["h"]
+
+    carry_f, hs = jax.lax.scan(step, carry0, gx.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)              # (B,S,D)
+    out = x + h @ p["wd"].astype(x.dtype)
+    if return_state:
+        return out, carry_f
+    return out
+
+
+def slstm_decode(cfg, p, x1, cache):
+    xn = rms_norm(x1, p["norm"], cfg.norm_eps)
+    gx = xn[:, 0].astype(jnp.float32) @ p["w"] + p["b"]
+    new = _slstm_step(cfg, p, gx, cache)
+    out = x1 + (new["h"].astype(x1.dtype) @ p["wd"].astype(x1.dtype))[:, None, :]
+    return out, new

@@ -1,0 +1,2 @@
+from repro.serving.engine import EdgeCluster, Request  # noqa: F401
+from repro.serving.loader import PodCache, WeightStore  # noqa: F401

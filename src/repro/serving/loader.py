@@ -1,0 +1,106 @@
+"""Submodel weight residency: the paper's caching variable, made real.
+
+``WeightStore`` is the "cloud": full parameter trees per model type.
+``PodCache`` is one BS/pod's HBM: it holds *truncated* parameter trees
+(prefix segments + exit head — exactly the paper's submodel h_j).  Because
+segments are stacked, an upgrade i→j transfers only the Δ segments and the
+new exit head; a shrink is a slice (instant).  Transfer time is
+bytes / bandwidth — the same quantity the CoCaR-OL state machine tracks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+
+from repro.models import model as M
+from repro.models import partition
+from repro.models.config import ModelConfig, build_plan
+
+
+class WeightStore:
+    def __init__(self, cfgs: dict, seed: int = 0):
+        self.cfgs = dict(cfgs)
+        self.params = {}
+        for i, (name, cfg) in enumerate(self.cfgs.items()):
+            self.params[name] = M.init(cfg, jax.random.key(seed + i))
+
+    def set_params(self, name, params):
+        self.params[name] = params
+
+
+@dataclass
+class LoadEvent:
+    model: str
+    from_exit: int
+    to_exit: int
+    bytes: int
+    seconds: float
+    done_at: float
+
+
+class PodCache:
+    """One pod's resident submodels + in-flight loads."""
+
+    def __init__(self, store: WeightStore, capacity_bytes: int,
+                 bandwidth_Bps: float):
+        self.store = store
+        self.capacity = capacity_bytes
+        self.bw = bandwidth_Bps
+        self.resident: dict = {}            # model -> exit idx (0-based)
+        self.params: dict = {}              # model -> truncated tree
+        self.loading: dict = {}             # model -> LoadEvent
+
+    # ------------------------------------------------------------------
+    def used_bytes(self) -> int:
+        total = 0
+        for name, j in self.resident.items():
+            total += partition.submodel_bytes(self.store.cfgs[name], j)
+        for name, ev in self.loading.items():
+            total += partition.submodel_bytes(self.store.cfgs[name],
+                                              ev.to_exit)
+        return total
+
+    def request_load(self, model: str, to_exit: int, now: float):
+        """Start (or instantly apply) a submodel transition."""
+        cfg = self.store.cfgs[model]
+        cur = self.resident.get(model, -1)
+        if model in self.loading:
+            return None
+        if to_exit == cur:
+            return None
+        if to_exit < cur:                   # shrink: instant slice
+            self._materialize(model, to_exit)
+            return LoadEvent(model, cur, to_exit, 0, 0.0, now)
+        nbytes = partition.delta_bytes(cfg, cur, to_exit)
+        projected = self.used_bytes() + nbytes
+        if cur >= 0:
+            projected -= 0                  # old prefix is reused
+        if projected > self.capacity:
+            raise MemoryError(f"{model}->{to_exit} would exceed capacity")
+        secs = nbytes / self.bw
+        ev = LoadEvent(model, cur, to_exit, nbytes, secs, now + secs)
+        self.loading[model] = ev
+        return ev
+
+    def evict(self, model: str):
+        self.resident.pop(model, None)
+        self.params.pop(model, None)
+        self.loading.pop(model, None)
+
+    def tick(self, now: float):
+        """Complete any finished loads."""
+        done = [m for m, ev in self.loading.items() if ev.done_at <= now]
+        for m in done:
+            ev = self.loading.pop(m)
+            self._materialize(m, ev.to_exit)
+        return done
+
+    def _materialize(self, model: str, j: int):
+        cfg = self.store.cfgs[model]
+        self.params[model] = partition.submodel_params(
+            cfg, self.store.params[model], j)
+        self.resident[model] = j
+
+    def serveable(self, model: str):
+        return self.resident.get(model, -1)

@@ -1,0 +1,137 @@
+"""Queueing simulator for the edge data plane: arrivals, per-pod queues,
+deadline-aware routing, and latency percentiles.
+
+The EdgeCluster executes real generation; this simulator layers a discrete-
+event queueing model on top (Poisson arrivals, service times from the
+catalog FLOPs model) so serving-level metrics — p50/p95/p99 latency, SLO
+attainment, per-pod utilization — can be studied against CoCaR(-OL) caching
+decisions at arbitrary load, without running tokens for every request.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.models import partition
+
+
+@dataclass(order=True)
+class _Event:
+    time: float
+    kind: str = field(compare=False)       # "arrival" | "finish"
+    payload: object = field(compare=False, default=None)
+
+
+@dataclass
+class SimRequest:
+    rid: int
+    model: str
+    tokens: int
+    arrival: float
+    deadline: float
+    start: float = -1.0
+    finish: float = -1.0
+    pod: int = -1
+    precision: float = 0.0
+
+    @property
+    def latency(self):
+        return self.finish - self.arrival if self.finish >= 0 else np.inf
+
+    @property
+    def met_slo(self):
+        return self.finish >= 0 and self.finish <= self.deadline
+
+
+class QueueSim:
+    """Single-server-per-pod FCFS queues with precision-aware routing."""
+
+    def __init__(self, cfgs: dict, residency: dict, compute_flops: float,
+                 precisions=None, seed: int = 0):
+        """residency: {pod: {model: exit_idx}}."""
+        self.cfgs = cfgs
+        self.residency = residency
+        self.compute = compute_flops
+        self.rng = np.random.default_rng(seed)
+        self.busy_until = {p: 0.0 for p in residency}
+        self.done: list = []
+        self.dropped = 0
+        self._prec = precisions or {}
+
+    def precision_of(self, model, j):
+        if (model, j) in self._prec:
+            return self._prec[(model, j)]
+        cfg = self.cfgs[model]
+        frac = cfg.exit_layers[j] / cfg.n_layers
+        return 0.99 * (1 - 0.45 * (1 - frac) ** 1.5)
+
+    def service_time(self, model, j, tokens):
+        c = partition.submodel_flops_per_token(self.cfgs[model], j,
+                                               ctx=max(tokens, 1))
+        return tokens * c / self.compute
+
+    def route(self, req: SimRequest):
+        """Max precision among pods that can still meet the deadline."""
+        best = None
+        for p, models in self.residency.items():
+            j = models.get(req.model, -1)
+            if j < 0:
+                continue
+            eta = max(self.busy_until[p], req.arrival)
+            fin = eta + self.service_time(req.model, j, req.tokens)
+            if fin > req.deadline:
+                continue
+            score = self.precision_of(req.model, j)
+            if best is None or score > best[0]:
+                best = (score, p, j, fin)
+        return best
+
+    def run(self, arrivals: list):
+        """arrivals: list of SimRequest sorted by arrival time."""
+        for req in sorted(arrivals, key=lambda r: r.arrival):
+            choice = self.route(req)
+            if choice is None:
+                self.dropped += 1
+                continue
+            score, p, j, fin = choice
+            req.pod = p
+            req.start = max(self.busy_until[p], req.arrival)
+            req.finish = fin
+            req.precision = score
+            self.busy_until[p] = fin
+            self.done.append(req)
+        return self.metrics()
+
+    def metrics(self):
+        lats = np.asarray([r.latency for r in self.done]) if self.done else \
+            np.asarray([np.inf])
+        total = len(self.done) + self.dropped
+        return {
+            "served": len(self.done),
+            "dropped": self.dropped,
+            "slo_attainment": (sum(r.met_slo for r in self.done) / total
+                               if total else 0.0),
+            "p50_latency": float(np.percentile(lats, 50)),
+            "p95_latency": float(np.percentile(lats, 95)),
+            "p99_latency": float(np.percentile(lats, 99)),
+            "avg_precision": (sum(r.precision for r in self.done) / total
+                              if total else 0.0),
+        }
+
+
+def poisson_arrivals(rate_per_s: float, duration_s: float, models: list,
+                     popularity, tokens: int = 128, slo_s: float = 2.0,
+                     seed: int = 0):
+    rng = np.random.default_rng(seed)
+    t, rid, out = 0.0, 0, []
+    while True:
+        t += rng.exponential(1.0 / rate_per_s)
+        if t > duration_s:
+            break
+        m = models[rng.choice(len(models), p=popularity)]
+        out.append(SimRequest(rid=rid, model=m, tokens=tokens, arrival=t,
+                              deadline=t + slo_s))
+        rid += 1
+    return out

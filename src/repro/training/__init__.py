@@ -1,0 +1,1 @@
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update  # noqa: F401

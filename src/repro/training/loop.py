@@ -1,0 +1,81 @@
+"""Training loop with fault tolerance: periodic atomic checkpoints,
+auto-resume from the latest complete checkpoint, optional simulated
+preemption (for the restart tests), and per-exit loss tracking (the
+dynamic-DNN precision ladder comes from these).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.launch.steps import init_train_state, make_train_step
+from repro.models.config import ModelConfig
+from repro.training import checkpoint as CKPT
+from repro.training.optim import AdamWConfig
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 200
+    batch: int = 8
+    seq: int = 64
+    ckpt_dir: str = ""
+    ckpt_every: int = 50
+    keep_last: int = 3
+    log_every: int = 20
+    seed: int = 0
+    preempt_at: int = -1        # simulate a node failure at this step
+
+
+def train(cfg: ModelConfig, tc: TrainConfig, data_iter, oc=None,
+          log_fn=print):
+    oc = oc or AdamWConfig(total_steps=tc.steps)
+    step_fn = jax.jit(make_train_step(cfg, oc), donate_argnums=(0,))
+    state = init_train_state(cfg, jax.random.key(tc.seed))
+
+    start = 0
+    if tc.ckpt_dir:
+        restored, step = CKPT.restore(tc.ckpt_dir, state)
+        if restored is not None:
+            state, start = restored, step
+            log_fn(f"[resume] from checkpoint step {step}")
+
+    history = []
+    t0 = time.time()
+    for step, batch in enumerate(data_iter, start=0):
+        if step < start:
+            continue                         # replay the stream deterministically
+        if step >= tc.steps:
+            break
+        if step == tc.preempt_at:
+            raise RuntimeError(f"simulated preemption at step {step}")
+        state, metrics = step_fn(state, batch)
+        if (step + 1) % tc.log_every == 0 or step == tc.steps - 1:
+            m = {k: np.asarray(v).tolist() for k, v in metrics.items()}
+            m["step"] = step + 1
+            m["sec"] = round(time.time() - t0, 1)
+            history.append(m)
+            log_fn(f"step {step+1:5d} loss={m['loss']:.4f} "
+                   f"ce_per_exit={[round(c, 3) for c in m['ce_per_exit']]}")
+        if tc.ckpt_dir and (step + 1) % tc.ckpt_every == 0:
+            CKPT.save(tc.ckpt_dir, state, step + 1, keep_last=tc.keep_last)
+    if tc.ckpt_dir:
+        CKPT.save(tc.ckpt_dir, state, min(tc.steps, step + 1),
+                  keep_last=tc.keep_last)
+    return state, history
+
+
+def eval_exit_ce(cfg: ModelConfig, state, data_iter, n_batches=4):
+    """Per-exit CE on held-out batches -> the measured precision ladder."""
+    from repro.launch.steps import make_loss_fn
+    loss_fn = jax.jit(make_loss_fn(cfg))
+    ces = []
+    for i, batch in enumerate(data_iter):
+        if i >= n_batches:
+            break
+        _, extras = loss_fn(state["params"], batch)
+        ces.append(np.asarray(extras["ce_per_exit"]))
+    return np.mean(ces, axis=0)

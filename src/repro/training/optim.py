@@ -1,0 +1,78 @@
+"""Pure-JAX AdamW with mixed-precision master weights.
+
+State keeps an f32 master copy when params are low-precision (bf16), plus f32
+first/second moments — all sharded identically to the params (ZeRO-style 2D
+FSDP×TP sharding comes from the param specs in ``distribution/sharding.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(oc: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - oc.warmup_steps) /
+                    jnp.maximum(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return oc.lr * warm * (oc.min_lr_ratio + (1 - oc.min_lr_ratio) * cos)
+
+
+def adamw_init(params):
+    # copy=True: the master must never alias the param buffer (donation)
+    f32 = lambda t: jax.tree.map(
+        lambda x: jnp.array(x, dtype=jnp.float32, copy=True), t)
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return {"master": f32(params), "m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(oc: AdamWConfig, params, grads, opt):
+    step = opt["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr = lr_at(oc, step)
+    b1, b2 = oc.b1, oc.b2
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, mw):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        u = (m2 / c1) / (jnp.sqrt(v2 / c2) + oc.eps) + oc.weight_decay * mw
+        return m2, v2, mw - lr * u
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = tdef.flatten_up_to(opt["m"])
+    flat_v = tdef.flatten_up_to(opt["v"])
+    flat_w = tdef.flatten_up_to(opt["master"])
+    out = [upd(g, m, v, w) for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w)]
+    m_new = tdef.unflatten([o[0] for o in out])
+    v_new = tdef.unflatten([o[1] for o in out])
+    w_new = tdef.unflatten([o[2] for o in out])
+    params_new = jax.tree.map(
+        lambda w, p: w.astype(p.dtype), w_new, params)
+    opt_new = {"master": w_new, "m": m_new, "v": v_new, "step": step}
+    return params_new, opt_new, {"grad_norm": gnorm, "lr": lr}

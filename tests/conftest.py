@@ -1,0 +1,14 @@
+import os
+import sys
+
+# tests see the single real CPU device (the 512-device override is ONLY for
+# launch/dryrun.py, which sets XLA_FLAGS itself before importing jax)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests: reduced same-family configs run one
+forward/train step on CPU, assert output shapes + no NaNs, and check the
+serving paths (prefill + decode) agree with the training forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as M
+from repro.models.config import build_plan
+
+ARCHS = configs.ARCH_IDS
+
+
+def _batch(cfg, key, B, S):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["tokens"] = batch["tokens"][:, : S - cfg.frontend_len]
+        batch["patches"] = jax.random.normal(
+            key, (B, cfg.frontend_len, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.encoder_len, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = configs.get_smoke(arch)
+    plan = build_plan(cfg)
+    key = jax.random.key(0)
+    params = M.init(cfg, key)
+    B, S = 2, 32
+    batch = _batch(cfg, key, B, S)
+    logits, aux = M.apply_train(cfg, params, batch, plan)
+    assert len(logits) == cfg.n_exits
+    for lg in logits:
+        assert lg.shape == (B, S, cfg.padded_vocab)
+        assert not np.any(np.isnan(np.asarray(lg))), f"{arch}: NaN logits"
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    from repro.launch.steps import init_train_state, make_train_step
+    cfg = configs.get_smoke(arch)
+    B, S = 2, 32
+    key = jax.random.key(1)
+    state = init_train_state(cfg, key)
+    batch = _batch(cfg, key, B, S)
+    batch["labels"] = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size,
+                                          batch["tokens"].shape),
+        jnp.int32)
+    step = jax.jit(make_train_step(cfg))
+    state2, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert float(metrics["grad_norm"]) > 0
+    assert int(state2["opt"]["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    """decode(t | prefill(x[:T])) must equal the training forward at the
+    same position — exercises every cache type (KV, ring, conv, ssm, lstm)."""
+    cfg = configs.get_smoke(arch)
+    plan = build_plan(cfg)
+    key = jax.random.key(2)
+    params = M.init(cfg, key)
+    B, S = 2, 32
+    batch = _batch(cfg, key, B, S)
+
+    logits_all, _ = M.apply_train(cfg, params, batch, plan)
+    full = logits_all[-1]                      # (B, S, V) final exit
+
+    cache = M.cache_init(cfg, B, S + 4, plan)
+    lg_pref, cache = M.prefill(cfg, params, batch, cache, plan=plan)
+    np.testing.assert_allclose(np.asarray(lg_pref), np.asarray(full[:, -1]),
+                               atol=2e-3, rtol=2e-3)
+
+    # one decode step == training forward on the extended sequence
+    nxt = jnp.argmax(lg_pref, -1)[:, None].astype(jnp.int32)
+    lg_dec, cache = M.decode(cfg, params, nxt, jnp.int32(S), cache, plan=plan)
+    batch2 = dict(batch)
+    batch2["tokens"] = jnp.concatenate([batch["tokens"], nxt], axis=1)
+    logits2, _ = M.apply_train(cfg, params, batch2, plan)
+    np.testing.assert_allclose(np.asarray(lg_dec),
+                               np.asarray(logits2[-1][:, -1]),
+                               atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_submodel_is_prefix(arch):
+    """Serving exit j must equal the training forward's exit-j logits —
+    the paper's submodel h_j is literally a prefix + its own head."""
+    cfg = configs.get_smoke(arch)
+    plan = build_plan(cfg)
+    key = jax.random.key(3)
+    params = M.init(cfg, key)
+    B, S = 2, 32
+    batch = _batch(cfg, key, B, S)
+    logits_all, _ = M.apply_train(cfg, params, batch, plan)
+    for j in range(cfg.n_exits):
+        cache = M.cache_init(cfg, B, S, plan)
+        lg, _ = M.prefill(cfg, params, batch, cache, exit_idx=j, plan=plan)
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(logits_all[j][:, -1]),
+                                   atol=2e-3, rtol=2e-3)

@@ -1,0 +1,105 @@
+"""CoCaR-OL: download state machine (Eqs. 35–37), QoE routing, knapsack
+fitting, and end-to-end ordering vs baselines."""
+import numpy as np
+import pytest
+
+from repro.core.online import OnlineConfig, OnlineSim, run_online
+from repro.mec.scenario import MECConfig
+
+
+def make_sim(**kw):
+    ocfg = OnlineConfig(**kw)
+    cfg = MECConfig(n_users=100)
+    return OnlineSim(cfg, ocfg), ocfg
+
+
+def test_download_state_machine_sequential():
+    """Eq. 35: submodels download in order and become servable the slot
+    their Δ completes (Eq. 37)."""
+    sim, ocfg = make_sim(n_slots=10)
+    n, m = 0, 0
+    s = sim.sc.sizes
+    # enqueue an upgrade h0 -> h2 (two deltas)
+    sim.O[n, m, 0] = s[m, 1]
+    sim.O[n, m, 1] = s[m, 2] - s[m, 1]
+    budget = sim.W[n] * ocfg.slot_s
+    slots_h1 = int(np.ceil(s[m, 1] / budget))
+    for t in range(slots_h1):
+        assert np.argmax(sim.X[n, m]) == 0
+        sim.routine_update()
+    assert np.argmax(sim.X[n, m]) == 1          # h1 live after its delta
+    total_slots = int(np.ceil(s[m, 2] / budget))
+    for t in range(total_slots - slots_h1):
+        sim.routine_update()
+    assert np.argmax(sim.X[n, m]) == 2          # then h2
+
+
+def test_shrink_is_immediate():
+    sim, _ = make_sim(n_slots=10)
+    sim.X[0, 0, :] = 0
+    sim.X[0, 0, 3] = 1
+    X_hyp, shrunk = sim._fit(0, 1, 3)
+    assert X_hyp is not None
+    # applying a shrink never leaves memory violated
+    used = (X_hyp[0] * sim.sc.sizes).sum()
+    assert used <= sim.sc.R[0] + 1e-9
+
+
+def test_route_respects_deadline():
+    sim, _ = make_sim(n_slots=10)
+    q, lat = sim.qoe_matrix()
+    assert np.all(q[lat > sim.cfg.ddl_s] == 0)
+
+
+def test_qoe_decays_with_latency():
+    sim, _ = make_sim(n_slots=10)
+    sim.X[:, :, :] = 0
+    sim.X[:, :, 1] = 1                           # everything cached small
+    q, lat = sim.qoe_matrix()
+    # farther targets (higher latency) never yield higher QoE for the same
+    # cached submodel
+    m = 0
+    for nh in range(sim.N):
+        order = np.argsort(lat[nh, :, m])
+        qs = q[nh, order, m]
+        assert np.all(np.diff(qs) <= 1e-9)
+
+
+def test_partition_beats_no_partition():
+    cfg = MECConfig(n_users=150)
+    r_p = run_online(cfg, OnlineConfig(n_slots=50), "cocar-ol")
+    r_np = run_online(cfg, OnlineConfig(n_slots=50, partition=False),
+                      "cocar-ol")
+    assert r_p["avg_qoe"] > r_np["avg_qoe"]
+
+
+def test_cocarol_beats_lfu_and_random():
+    cfg = MECConfig(n_users=150)
+    ocfg = OnlineConfig(n_slots=50)
+    r = {a: run_online(cfg, ocfg, a) for a in ("cocar-ol", "lfu", "random")}
+    assert r["cocar-ol"]["avg_qoe"] > r["lfu"]["avg_qoe"]
+    assert r["cocar-ol"]["avg_qoe"] > r["random"]["avg_qoe"]
+
+
+def test_memory_never_violated():
+    cfg = MECConfig(n_users=100)
+    ocfg = OnlineConfig(n_slots=30)
+    sim = OnlineSim(cfg, ocfg)
+    rng = np.random.default_rng(0)
+    for t in range(ocfg.n_slots):
+        sim.routine_update()
+        m_u, home = sim.draw_slot_requests(t)
+        counts = np.zeros((sim.N, sim.M))
+        np.add.at(counts, (home, m_u), 1.0)
+        sim.hist.append(counts)
+        for n in rng.integers(0, sim.N, size=ocfg.rounds):
+            sim.adjust_bs(n)
+        # resident + in-flight targets must fit
+        for n in range(sim.N):
+            used = (sim.X[n] * sim.sc.sizes).sum()
+            for m in range(sim.M):
+                if sim.O[n, m].sum() > 0:
+                    tgt = sim.target[n, m]
+                    cur = int(np.argmax(sim.X[n, m]))
+                    used += sim.sc.sizes[m, tgt] - sim.sc.sizes[m, cur]
+            assert used <= sim.sc.R[n] * 1.001, (t, n, used)

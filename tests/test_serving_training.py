@@ -1,0 +1,164 @@
+"""Serving runtime (loader, engine, failures, stragglers) and training
+substrate (checkpoint atomicity, preemption resume, learning)."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.serving import EdgeCluster, PodCache, Request, WeightStore
+
+
+def make_cluster(cap=10_000_000, n_pods=2):
+    cfgs = {"qwen-s": configs.get_smoke("qwen1.5-0.5b"),
+            "mix-s": configs.get_smoke("mixtral-8x7b")}
+    store = WeightStore(cfgs, seed=0)
+    return EdgeCluster(store, n_pods=n_pods, capacity_bytes=cap,
+                       bandwidth_Bps=1e9)
+
+
+def test_delta_load_and_serve():
+    cl = make_cluster()
+    cl.apply_caching({0: {"qwen-s": 0}})
+    cl.tick(1.0)
+    assert cl.pods[0].cache.resident["qwen-s"] == 0
+    ev = cl.pods[0].cache.request_load("qwen-s", 2, cl.now)
+    assert ev.bytes > 0
+    from repro.models import partition
+    cfg = cl.store.cfgs["qwen-s"]
+    assert ev.bytes == partition.delta_bytes(cfg, 0, 2)
+    cl.tick(ev.seconds + 0.01)
+    assert cl.pods[0].cache.resident["qwen-s"] == 2
+    r = Request(rid=0, model="qwen-s", tokens=[1, 2], max_new=3, home=0,
+                deadline=cl.now + 100)
+    assert cl.submit([r]) == 1
+    assert len(r.output) == 3 and r.precision > 0.9
+
+
+def test_capacity_enforced():
+    cfgs = {"qwen-s": configs.get_smoke("qwen1.5-0.5b")}
+    store = WeightStore(cfgs)
+    from repro.models import partition
+    full = partition.submodel_bytes(cfgs["qwen-s"], 2)
+    cache = PodCache(store, capacity_bytes=full - 1, bandwidth_Bps=1e9)
+    with pytest.raises(MemoryError):
+        cache.request_load("qwen-s", 2, 0.0)
+    cache.request_load("qwen-s", 0, 0.0)        # smaller submodel fits
+    cache.tick(1e9)
+    assert cache.resident["qwen-s"] == 0
+
+
+def test_failure_reroute():
+    cl = make_cluster()
+    cl.apply_caching({0: {"qwen-s": 2}, 1: {"qwen-s": 1}})
+    cl.tick(1.0)
+    cl.fail_pod(0)
+    r = Request(rid=1, model="qwen-s", tokens=[3], max_new=2, home=0,
+                deadline=cl.now + 100)
+    cl.submit([r])
+    assert r.served_by == 1                      # re-routed to survivor
+
+
+def test_straggler_mitigation():
+    cl = make_cluster()
+    cl.apply_caching({0: {"qwen-s": 2}, 1: {"qwen-s": 0}})
+    cl.tick(1.0)
+    cl.pods[0].busy_until = cl.now + 1e6         # pod 0 is a straggler
+    r = Request(rid=2, model="qwen-s", tokens=[3], max_new=2, home=0,
+                deadline=cl.now + 10)
+    cl.submit([r])
+    assert r.served_by == 1                      # lower precision, on time
+    assert r.precision < cl.precision_of("qwen-s", 2)
+
+
+def test_no_pod_available_goes_cloud():
+    cl = make_cluster()
+    r = Request(rid=3, model="qwen-s", tokens=[1], max_new=1, home=0,
+                deadline=cl.now + 10)
+    cl.submit([r])
+    assert r.missed and not r.done
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+def _train_cfg():
+    from repro.training.data import char_vocab
+    _, V = char_vocab()
+    return configs.get_smoke("qwen1.5-0.5b").replace(
+        vocab_size=max(V, 64), n_layers=2, d_model=96, d_ff=192)
+
+
+def test_loss_decreases_and_deep_exit_wins():
+    from repro.training.data import char_stream
+    from repro.training.loop import TrainConfig, train
+    cfg = _train_cfg()
+    tc = TrainConfig(steps=120, batch=8, seq=64, log_every=20)
+    _, hist = train(cfg, tc, char_stream(8, 64, 200), log_fn=lambda *_: None)
+    first, last = hist[0], hist[-1]
+    assert last["loss"] < first["loss"] * 0.8
+    # the deeper exit must end at lower CE — the paper's precision ladder
+    assert last["ce_per_exit"][-1] < last["ce_per_exit"][0]
+
+
+def test_checkpoint_roundtrip_and_preemption():
+    from repro.training import checkpoint as CKPT
+    from repro.training.data import char_stream
+    from repro.training.loop import TrainConfig, train
+    cfg = _train_cfg()
+    with tempfile.TemporaryDirectory() as ck:
+        tc = TrainConfig(steps=40, batch=4, seq=32, ckpt_dir=ck,
+                         ckpt_every=10, log_every=40, preempt_at=35)
+        with pytest.raises(RuntimeError, match="preemption"):
+            train(cfg, tc, char_stream(4, 32, 80), log_fn=lambda *_: None)
+        assert CKPT.latest_step(ck) == 30
+        tc2 = TrainConfig(steps=40, batch=4, seq=32, ckpt_dir=ck,
+                          ckpt_every=10, log_every=40)
+        state, hist = train(cfg, tc2, char_stream(4, 32, 80),
+                            log_fn=lambda *_: None)
+        assert int(state["opt"]["step"]) == 40
+        # restore equality
+        restored, step = CKPT.restore(ck, state)
+        assert step == 40
+        for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_elastic_restore_onto_mesh(tmp_path):
+    """Checkpoint saved unsharded restores onto a (new) mesh with the
+    production sharding rules — the elastic-scaling path."""
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.distribution import sharding as shd
+    from repro.models import model as M
+    from repro.training import checkpoint as CKPT
+    cfg = configs.get_smoke("chatglm3-6b")
+    params = M.init(cfg, jax.random.key(0))
+    CKPT.save(tmp_path, params, 5)
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    spec = shd.param_specs(cfg, mesh, params, mode="serve")
+    shardings = shd.named(mesh, spec)
+    restored, step = CKPT.restore(tmp_path, params, shardings=shardings)
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    """A crash mid-save must never corrupt the published checkpoints."""
+    from repro.training import checkpoint as CKPT
+    state = {"w": jnp.ones((4, 4)), "step": jnp.int32(7)}
+    CKPT.save(tmp_path, state, 10)
+    # simulate garbage from a crashed save
+    bad = tmp_path / ".tmp_crashed"
+    bad.mkdir()
+    (bad / "arrays.npz").write_bytes(b"junk")
+    assert CKPT.latest_step(tmp_path) == 10
+    restored, step = CKPT.restore(tmp_path, state)
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.ones((4, 4)))

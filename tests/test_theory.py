@@ -1,0 +1,58 @@
+"""Executable checks of the paper's Theorems 1–5 against rounding draws."""
+import numpy as np
+import pytest
+
+from repro.core import lp as LP
+from repro.core import theory
+from repro.mec.scenario import MECConfig, Scenario
+
+
+@pytest.fixture(scope="module")
+def solved():
+    cfg = MECConfig(n_users=200, seed=4)
+    sc = Scenario(cfg)
+    inst = sc.instance(0, sc.empty_cache())
+    x_f, A_f, obj = LP.solve_lp_scipy(inst)
+    return inst, x_f, A_f, obj
+
+
+def test_theorem1_holds_empirically(solved):
+    """Obj >= (1-δ)² P† for ≥90% of draws (Thm 1: w.h.p.)."""
+    inst, x_f, A_f, obj = solved
+    ratio = theory.theorem1_ratio(inst, obj)
+    if ratio is None:
+        pytest.skip("outside the theorem regime (P+ < 4 ln|H|)")
+    from repro.core.rounding import round_solution
+    ok = 0
+    n = 50
+    for s in range(n):
+        _, A_i = round_solution(inst, x_f, A_f, s)
+        if inst.objective(A_i) >= ratio * obj:
+            ok += 1
+    assert ok >= 0.9 * n, (ok, n, ratio)
+
+
+def test_theorem2_memory_violation_bounded(solved):
+    """Rounded memory never exceeds R by more than Thm 2's factor."""
+    inst, x_f, A_f, obj = solved
+    emp = theory.empirical_violations(inst, x_f, A_f, draws=100)
+    b = theory.bounds(inst, x_f, A_f, obj)
+    # the theorem factor is loose; the empirical max must sit below it
+    assert emp["memory_factor_max"] <= max(b["thm2_memory_factor"]) + 0.5
+    # Lemma 1: each BS's EXPECTED memory use respects its capacity
+    assert max(emp["memory_expectation_per_bs"]) <= 1.05
+
+
+def test_route_violation_small(solved):
+    """Σ_nh Ã <= small constant (Thm 3 regime: η† <= 1)."""
+    inst, x_f, A_f, _ = solved
+    emp = theory.empirical_violations(inst, x_f, A_f, draws=100)
+    assert emp["route_max"] <= 4
+
+
+def test_objective_concentrates(solved):
+    """Lemma 2 + concentration: std/mean of the rounded objective is small."""
+    inst, x_f, A_f, obj = solved
+    emp = theory.empirical_violations(inst, x_f, A_f, draws=100)
+    assert abs(emp["obj_mean"] - obj) / obj < 0.05
+    assert emp["obj_std"] / emp["obj_mean"] < 0.2
