@@ -1,16 +1,32 @@
-"""LP solver benchmark: HiGHS (oracle) vs JAX PDHG across instance sizes —
-objective parity and wall time (the PDHG path is the accelerator-native
-production solver; on CPU its advantage is jit-compiled batch windows)."""
+"""LP solver benchmark.
+
+1. HiGHS (oracle) vs JAX PDHG across instance sizes — objective parity and
+   wall time (the PDHG path is the accelerator-native production solver).
+2. Batched vs scalar PDHG on the sweep grid.  Each contender is timed in
+   its own fresh subprocess: compilation cost is part of what is being
+   compared (the pre-refactor loop recompiles every window, the cached
+   kernel once per shape, the batched dispatch once), and in-process
+   sequential timing lets earlier contenders warm XLA's caches for later
+   ones, silently distorting the comparison either way.
+"""
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
+
+import numpy as np
 
 from benchmarks import common
 from repro.core import lp as LP
-from repro.mec.scenario import MECConfig, Scenario
+from repro.experiments.sweep import DEFAULT_AXES
+from repro.mec.scenario import MECConfig, Scenario, config_grid, stack_instances
 
 
-def main():
+def bench_solvers():
+    """Scipy vs scalar PDHG parity/time across instance sizes."""
     rows = {}
     for U in (100, 300, 600):
         cfg = MECConfig(n_users=U, seed=2)
@@ -30,5 +46,132 @@ def main():
     return rows
 
 
+def _closure_jit_solve(inst, iters):
+    """The pre-refactor scalar path, reproduced exactly: the instance
+    arrays are captured by the jitted closure, so they are baked into the
+    HLO as constants — every window re-traces AND recompiles (different
+    constants -> XLA executable-cache miss).  This is what ``solve_lp_pdhg``
+    did before the kernel took the instance as an argument, and it is the
+    per-window cost the batched path eliminates.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    data = jax.tree_util.tree_map(jnp.asarray, LP.pdhg_data(inst))
+    run = jax.jit(lambda _: LP._pdhg_kernel(data, iters))
+    x, A = run(0)
+    return inst.objective(np.asarray(A))
+
+
+def _grid_instances(n_users: int):
+    cfgs = config_grid(MECConfig(n_users=n_users), DEFAULT_AXES)
+    scenarios = [Scenario(c) for c in cfgs]
+    return [sc.instance(0, sc.empty_cache()) for sc in scenarios]
+
+
+def _bench_mode(mode: str, iters: int, n_users: int):
+    """One contender, timed in THIS process (meant to run in a fresh one).
+    Prints a JSON line with the solve-phase seconds and per-window
+    objectives."""
+    insts = _grid_instances(n_users)
+    if mode == "loop":
+        t0 = time.time()
+        objs = [_closure_jit_solve(inst, iters) for inst in insts]
+        secs = time.time() - t0
+    elif mode == "cached":
+        t0 = time.time()
+        objs = [LP.solve_lp_pdhg(inst, iters=iters).obj for inst in insts]
+        secs = time.time() - t0
+    elif mode == "batched":
+        # stacking is part of the batched path's cost, so it is timed
+        # (the scalar contenders pay their per-window pdhg_data inside
+        # the loop too)
+        t0 = time.time()
+        stacked = stack_instances(insts)
+        res = LP.solve_lp_pdhg_batched(stacked.data, iters=iters)
+        sols = stacked.unstack(res.x, res.A)
+        objs = [inst.objective(A) for inst, (_, A) in zip(insts, sols)]
+        secs = time.time() - t0
+    else:
+        raise ValueError(mode)
+    print(json.dumps({"seconds": secs, "objs": objs}))
+
+
+def _bench_subprocess(mode: str, iters: int, n_users: int):
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_lp", "--mode", mode,
+         "--iters", str(iters), "--n-users", str(n_users)],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    if out.returncode != 0:
+        raise RuntimeError(f"bench mode {mode} failed:\n{out.stderr}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def bench_batched(iters: int = 3000, n_users: int = 40):
+    """Batched (one vmapped dispatch) vs scalar-loop PDHG over the sweep
+    grid.  Three contenders, each in a fresh subprocess (cold jit caches —
+    the true cost of running the sweep that way in a fresh process):
+
+      * ``scalar_loop``  — per-window closure-jit, the pre-refactor
+        ``solve_lp_pdhg`` behavior (recompiles every window);
+      * ``scalar_cached`` — per-window solve through the refactored
+        shape-cached kernel (compiles once per distinct (N, U) shape);
+      * ``batched``      — all windows in one vmapped dispatch (compiles
+        once for the padded stack).
+    """
+    res = {m: _bench_subprocess(m, iters, n_users)
+           for m in ("loop", "cached", "batched")}
+    B = len(res["batched"]["objs"])
+    t_loop = res["loop"]["seconds"]
+    t_scalar = res["cached"]["seconds"]
+    t_batched = res["batched"]["seconds"]
+    gap = max(abs(b - s) / max(abs(s), 1e-9)
+              for b, s in zip(res["batched"]["objs"], res["cached"]["objs"]))
+    out = {
+        "windows": B,
+        "iters": iters,
+        "scalar_loop_s": t_loop,
+        "scalar_cached_s": t_scalar,
+        "batched_s": t_batched,
+        "scalar_loop_windows_per_s": B / t_loop,
+        "scalar_cached_windows_per_s": B / t_scalar,
+        "batched_windows_per_s": B / t_batched,
+        "speedup_vs_loop": t_loop / t_batched,
+        "speedup_vs_cached": t_scalar / t_batched,
+        "max_obj_gap": gap,
+    }
+    common.csv_row(f"lp_batched_B{B}", t_batched / B * 1e6,
+                   f"speedup_vs_loop={out['speedup_vs_loop']:.2f}x;"
+                   f"speedup_vs_cached={out['speedup_vs_cached']:.2f}x;"
+                   f"gap={gap:.4f}")
+    common.save("lp_batched", out)
+    print(f"batched {out['batched_windows_per_s']:.2f} windows/s | "
+          f"scalar loop (pre-refactor, per-window jit) "
+          f"{out['scalar_loop_windows_per_s']:.2f} windows/s "
+          f"({out['speedup_vs_loop']:.2f}x) | cached-kernel scalar "
+          f"{out['scalar_cached_windows_per_s']:.2f} windows/s "
+          f"({out['speedup_vs_cached']:.2f}x) | max obj gap {gap:.4f}")
+    return out
+
+
+def main():
+    return {"batched": bench_batched(), "solvers": bench_solvers()}
+
+
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("loop", "cached", "batched"))
+    ap.add_argument("--iters", type=int, default=3000)
+    ap.add_argument("--n-users", type=int, default=40)
+    args = ap.parse_args()
+    if args.mode:
+        _bench_mode(args.mode, args.iters, args.n_users)
+    else:
+        main()

@@ -54,6 +54,11 @@ def main() -> None:
             common.csv_row(f"fig12_{cap}_{a}", 0,
                            f"qoe={r['avg_qoe']:.3f};hr={r['hit_rate']:.3f}")
 
+    sw = tables.sweep_table()
+    common.csv_row("sweep_grid", sw["seconds"] / len(sw["rows"]) * 1e6,
+                   f"variants={len(sw['rows'])};"
+                   f"total_s={sw['seconds']:.2f}")
+
     serving_slo.main()
     bench_lp.main()
     bench_kernels.main()

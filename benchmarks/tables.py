@@ -12,6 +12,16 @@ OFFLINE_ALGOS = ("lr", "cocar", "gatmarl", "greedy", "spr3", "random")
 ONLINE_ALGOS = ("cocar-ol", "lfu-mad", "lfu", "random")
 
 
+def sweep_table(**sweep_kw):
+    """Scenario-grid sweep (repro.experiments.sweep) as a persisted table:
+    every variant's window is LP-solved in one vmapped PDHG dispatch."""
+    from repro.experiments.sweep import run_sweep
+    rows, secs = common.timed(run_sweep, **sweep_kw)
+    out = {"seconds": secs, "rows": rows}
+    common.save("sweep_grid", out)
+    return out
+
+
 def table4_offline(algos=OFFLINE_ALGOS, **cfg_kw):
     cfg = common.paper_offline_cfg(**cfg_kw)
     out = {}

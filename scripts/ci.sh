@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# CI / newcomer entry point: install deps, run the tier-1 suite.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [ "${CI_SKIP_INSTALL:-0}" != "1" ]; then
+    python -m pip install -r requirements.txt
+fi
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

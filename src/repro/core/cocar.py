@@ -1,5 +1,10 @@
 """CoCaR — the offline algorithm (paper Alg. 1 + Sec. V-D) and the
 window-by-window offline driver.
+
+``cocar_window`` handles one window; ``cocar_windows_batched`` solves many
+independent windows (scenario-grid variants, seeds, parallel traces)
+through ONE vmapped PDHG dispatch — the entry point the sweep harness
+(``repro.experiments.sweep``) builds on.
 """
 from __future__ import annotations
 
@@ -7,33 +12,59 @@ import numpy as np
 
 from repro.core import lp as LP
 from repro.core.jdcr import JDCRInstance
-from repro.core.rounding import repair, round_solution
+from repro.core.rounding import repair, round_solution_batch
 from repro.mec import metrics as MET
-from repro.mec.scenario import MECConfig, Scenario
+from repro.mec.scenario import MECConfig, Scenario, stack_instances
 
 
-def cocar_window(inst: JDCRInstance, seed: int = 0, solver: str = "scipy",
-                 pdhg_iters: int = 4000, best_of: int = 8):
-    """One observation window: LP -> randomized rounding -> repair.
-
-    ``best_of`` draws Alg. 1 independently and keeps the feasible solution
-    with the highest objective — every draw satisfies Thm 1's guarantee, so
-    the max only tightens it (and cuts the repair losses from unlucky
-    memory-overflow draws; draws are microseconds next to the LP solve)."""
-    if solver == "pdhg":
-        res = LP.solve_lp_pdhg(inst, iters=pdhg_iters)
-        x_f, A_f, obj = res.x, res.A, res.obj
-    else:
-        x_f, A_f, obj = LP.solve_lp_scipy(inst)
+def _round_and_repair(inst: JDCRInstance, x_f, A_f, seed: int, best_of: int):
+    """All ``best_of`` Alg. 1 draws in one batched RNG op, then repair each
+    and keep the feasible solution with the highest objective — every draw
+    satisfies Thm 1's guarantee, so the max only tightens it (and cuts the
+    repair losses from unlucky memory-overflow draws; draws are
+    microseconds next to the LP solve)."""
+    xs, As = round_solution_batch(inst, x_f, A_f, seed,
+                                  n_trials=max(best_of, 1))
     best = None
-    for r in range(max(best_of, 1)):
-        x_i, A_i = round_solution(inst, x_f, A_f, seed * 131 + r)
+    for x_i, A_i in zip(xs, As):
         x, A = repair(inst, x_i, A_i)
         val = inst.objective(A)
         if best is None or val > best[0]:
             best = (val, x, A)
     _, x, A = best
+    return x, A
+
+
+def cocar_window(inst: JDCRInstance, seed: int = 0, solver: str = "scipy",
+                 pdhg_iters: int = 4000, best_of: int = 8):
+    """One observation window: LP -> randomized rounding -> repair."""
+    if solver == "pdhg":
+        res = LP.solve_lp_pdhg(inst, iters=pdhg_iters)
+        x_f, A_f, obj = res.x, res.A, res.obj
+    else:
+        x_f, A_f, obj = LP.solve_lp_scipy(inst)
+    x, A = _round_and_repair(inst, x_f, A_f, seed, best_of)
     return x, A, {"lp_obj": obj}
+
+
+def cocar_windows_batched(insts, seed: int = 0, pdhg_iters: int = 4000,
+                          best_of: int = 8):
+    """CoCaR over a stack of independent windows, LP-solved in ONE vmapped
+    PDHG dispatch (rounding + repair stay per-window: repair is a
+    host-side heuristic).
+
+    Instances may differ in N and U (padded inside ``stack_instances``)
+    but must share the catalog shape (M, H).  Returns a list of
+    (x, A, info) triples aligned with ``insts``.
+    """
+    stacked = stack_instances(list(insts))
+    res = LP.solve_lp_pdhg_batched(stacked.data, iters=pdhg_iters)
+    out = []
+    for i, (inst, (x_f, A_f)) in enumerate(
+            zip(stacked.insts, stacked.unstack(res.x, res.A))):
+        x, A = _round_and_repair(inst, x_f, A_f, seed * 7919 + i, best_of)
+        out.append((x, A, {"lp_obj": inst.objective(A_f)}))
+    return out
 
 
 def lr_window(inst: JDCRInstance):

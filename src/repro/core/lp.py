@@ -11,12 +11,22 @@ Two interchangeable backends:
     solver scales to large (N·U·H) instances and can run on the serving mesh
     next to the data plane.
 
-Both return fractional (x†, A†) with x (N,M,H+1) and A (N,U,H).
+The PDHG iteration is a pure function of a :class:`PDHGData` pytree, so it
+jits once per shape and vmaps across whole *batches* of windows:
+``solve_lp_pdhg_batched`` solves a stack of instances (windows, seeds,
+scenario-grid variants — see ``repro.mec.scenario.stack_instances``) in one
+dispatch.  Heterogeneous (N, U) stacks are padded with inert base stations
+(masked out of the routing update entirely via ``bs_mask``) and inert
+users (zero precision and a zero one-hot row, so no mass ever moves
+toward them); real rows see exactly the per-iteration updates of a solo
+solve.
+
+Both backends return fractional (x†, A†) with x (N,M,H+1) and A (N,U,H).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
+from typing import NamedTuple
 
 import numpy as np
 
@@ -104,37 +114,71 @@ def solve_lp_scipy(inst: JDCRInstance):
 
 
 # ---------------------------------------------------------------------------
-# JAX PDHG (matrix-free, diagonally preconditioned)
+# JAX PDHG (matrix-free, diagonally preconditioned, batchable)
 # ---------------------------------------------------------------------------
 
-@dataclass
-class PDHGResult:
-    x: np.ndarray
-    A: np.ndarray
-    obj: float
-    iters: int
-    primal_res: float
-    dual_res: float
+class PDHGData(NamedTuple):
+    """Everything the PDHG iteration needs about one window, as arrays.
+
+    A pure pytree: jit-traceable, and vmappable over a leading batch axis
+    (see ``solve_lp_pdhg_batched``).  Shapes (unbatched):
+
+      sizes      (M, H+1)   submodel memory footprints r_h
+      prec_u     (U, H)     objective coefficients p_h per user
+      T          (N, U, H)  end-to-end latency T̂ (paper Eq. 15)
+      L          (N, U, H)  model-load latency (paper Eq. 16)
+      onehot_mu  (U, M)     one-hot of each user's requested model type
+      R          (N,)       memory capacity
+      ddl        (U,)       latency budgets
+      s_u        (U,)       initiation times (load-latency budgets)
+      bs_mask    (N,)       1 for real base stations, 0 for padding; the
+                            kernel freezes routing mass at masked rows and
+                            sizes the route-dual step from the mask, so
+                            padded rows never perturb real ones
+    """
+    sizes: object
+    prec_u: object
+    T: object
+    L: object
+    onehot_mu: object
+    R: object
+    ddl: object
+    s_u: object
+    bs_mask: object
 
 
-def _pdhg_ops(inst: JDCRInstance):
-    """Closure building K / K^T and diagonal preconditioners as jnp ops."""
+def pdhg_data(inst: JDCRInstance) -> PDHGData:
+    """Extract the solver-facing arrays from one instance."""
+    U, M = inst.U, inst.M
+    onehot_mu = np.zeros((U, M))
+    onehot_mu[np.arange(U), inst.m_u] = 1.0
+    return PDHGData(
+        sizes=np.asarray(inst.sizes, dtype=np.float64),
+        prec_u=np.asarray(inst.prec[inst.m_u, 1:], dtype=np.float64),
+        T=np.asarray(inst.e2e_latency(), dtype=np.float64),
+        L=np.asarray(inst.load_latency(), dtype=np.float64),
+        onehot_mu=onehot_mu,
+        R=np.asarray(inst.R, dtype=np.float64),
+        ddl=np.asarray(inst.ddl, dtype=np.float64),
+        s_u=np.asarray(inst.s_u, dtype=np.float64),
+        bs_mask=np.ones(inst.N))
+
+
+def _pdhg_kernel(data: PDHGData, iters: int):
+    """One window's PDHG solve as a pure jnp function of ``data``.
+
+    Chambolle–Pock with Pock–Chambolle diagonal step sizes (alpha = 1):
+    tau_j = 1/sum_i |K_ij|, sigma_i = 1/sum_j |K_ij|.  Duals: the one-hot
+    equality (N,M) is free, every inequality dual is projected to >= 0.
+    """
+    import jax
     import jax.numpy as jnp
 
-    N, M, H, U = inst.N, inst.M, inst.H, inst.U
-    sizes = jnp.asarray(inst.sizes)
-    T = jnp.asarray(inst.e2e_latency())
-    L = jnp.asarray(inst.load_latency())
-    m_u = jnp.asarray(inst.m_u)
-    prec_u = jnp.asarray(inst.prec[inst.m_u, 1:])          # (U,H)
-    R = jnp.asarray(inst.R)
-    ddl = jnp.asarray(inst.ddl)
-    s_u = jnp.asarray(inst.s_u)
-
-    onehot_mu = jnp.zeros((U, M)).at[jnp.arange(U), m_u].set(1.0)  # (U,M)
+    sizes, prec_u, T, L, onehot_mu, R, ddl, s_u, bs_mask = data
+    N, U, H = T.shape
+    M = sizes.shape[0]
 
     def K(x, A):
-        """Constraint operator. Duals: eq (N,M) free; ineq >= 0."""
         y_eq = x.sum(-1) - 1.0                                      # (N,M)
         y_mem = jnp.einsum("nmh,mh->n", x, sizes) - R               # (N,)
         y_route = A.sum(axis=(0, 2)) - 1.0                          # (U,)
@@ -155,67 +199,93 @@ def _pdhg_ops(inst: JDCRInstance):
             + y_lat[None, :, None] * T + y_load[None, :, None] * L
         return gx, gA
 
-    def diag_precond():
-        """Pock–Chambolle diagonal steps: tau_j = 1/sum_i |K_ij|,
-        sigma_i = 1/sum_j |K_ij| (alpha = 1)."""
-        # row sums (per dual)
-        r_eq = jnp.full((N, M), float(H + 1))
-        r_mem = jnp.full((N,), float(sizes.sum()))
-        r_route = jnp.full((U,), float(N * H))
-        r_lat = T.sum(axis=(0, 2))
-        r_load = L.sum(axis=(0, 2))
-        r_ax = jnp.full((N, U, H), 2.0)
-        sig = tuple(1.0 / jnp.maximum(r, 1e-9)
-                    for r in (r_eq, r_mem, r_route, r_lat, r_load, r_ax))
-        # column sums (per primal)
-        cx = jnp.ones((N, M, H + 1))                                # eq
-        cx += sizes[None]                                           # mem
-        users_of_m = onehot_mu.sum(0)                               # (M,)
-        cx = cx.at[:, :, 1:].add(users_of_m[None, :, None])         # A<=x
-        cA = jnp.ones((N, U, H)) + T + L + 1.0                      # route+lat+load+ax
-        tau = (1.0 / jnp.maximum(cx, 1e-9), 1.0 / jnp.maximum(cA, 1e-9))
-        return tau, sig
-
-    obj_c = prec_u                                                  # (U,H)
-    return K, KT, diag_precond, obj_c
-
-
-def solve_lp_pdhg(inst: JDCRInstance, iters: int = 4000, check_every: int = 200,
-                  tol: float = 2e-3):
-    import jax
-    import jax.numpy as jnp
-
-    N, M, H, U = inst.N, inst.M, inst.H, inst.U
-    K, KT, diag_precond, prec_u = _pdhg_ops(inst)
-    (tau_x, tau_A), sig = diag_precond()
+    # row sums (per dual)
+    r_eq = jnp.full((N, M), float(H + 1))
+    r_mem = jnp.ones((N,)) * sizes.sum()
+    r_route = jnp.ones((U,)) * bs_mask.sum() * H     # only real BSs route
+    r_lat = T.sum(axis=(0, 2))
+    r_load = L.sum(axis=(0, 2))
+    r_ax = jnp.full((N, U, H), 2.0)
+    sig = tuple(1.0 / jnp.maximum(r, 1e-9)
+                for r in (r_eq, r_mem, r_route, r_lat, r_load, r_ax))
+    # column sums (per primal)
+    cx = jnp.ones((N, M, H + 1))                                    # eq
+    cx += sizes[None]                                               # mem
+    users_of_m = onehot_mu.sum(0)                                   # (M,)
+    cx = cx.at[:, :, 1:].add(users_of_m[None, :, None])             # A<=x
+    cA = jnp.ones((N, U, H)) + T + L + 1.0                          # route+lat+load+ax
+    tau_x = 1.0 / jnp.maximum(cx, 1e-9)
+    # masked rows get a zero step: A starts at 0 there and stays exactly 0,
+    # so padded base stations never couple into the real rows' duals
+    tau_A = bs_mask[:, None, None] / jnp.maximum(cA, 1e-9)
 
     def proj_dual(y):
         y_eq, *ineq = y
         return (y_eq,) + tuple(jnp.maximum(v, 0.0) for v in ineq)
 
-    @jax.jit
-    def run(_):
-        x = jnp.full((N, M, H + 1), 1.0 / (H + 1))
-        A = jnp.zeros((N, U, H))
-        y = tuple(jnp.zeros_like(v) for v in K(x, A))
+    x = jnp.full((N, M, H + 1), 1.0 / (H + 1))
+    A = jnp.zeros((N, U, H))
+    y = tuple(jnp.zeros_like(v) for v in K(x, A))
 
-        def body(carry, _):
-            x, A, y = carry
-            gx, gA = KT(y)
-            # gradient of -objective wrt A is -prec
-            x_new = jnp.clip(x - tau_x * gx, 0.0, 1.0)
-            A_new = jnp.clip(A - tau_A * (gA - prec_u[None]), 0.0, 1.0)
-            xb = 2 * x_new - x
-            Ab = 2 * A_new - A
-            Ky = K(xb, Ab)
-            y_new = proj_dual(tuple(yy + s * kk
-                                    for yy, s, kk in zip(y, sig, Ky)))
-            return (x_new, A_new, y_new), None
+    def body(carry, _):
+        x, A, y = carry
+        gx, gA = KT(y)
+        # gradient of -objective wrt A is -prec
+        x_new = jnp.clip(x - tau_x * gx, 0.0, 1.0)
+        A_new = jnp.clip(A - tau_A * (gA - prec_u[None]), 0.0, 1.0)
+        xb = 2 * x_new - x
+        Ab = 2 * A_new - A
+        Ky = K(xb, Ab)
+        y_new = proj_dual(tuple(yy + s * kk
+                                for yy, s, kk in zip(y, sig, Ky)))
+        return (x_new, A_new, y_new), None
 
-        (x, A, y), _ = jax.lax.scan(body, (x, A, y), None, length=iters)
-        return x, A
+    (x, A, y), _ = jax.lax.scan(body, (x, A, y), None, length=iters)
+    return x, A
 
-    x, A = run(0)
+
+_JIT_CACHE = {}
+
+
+def _jitted_kernel(batched: bool):
+    """Module-level jit cache: one compile per (batched, shape, iters) —
+    repeat calls at the same shapes (e.g. window loops) skip tracing."""
+    key = ("batched" if batched else "single")
+    if key not in _JIT_CACHE:
+        import jax
+        fn = _pdhg_kernel
+        if batched:
+            fn = jax.vmap(fn, in_axes=(0, None))
+        _JIT_CACHE[key] = jax.jit(fn, static_argnums=(1,))
+    return _JIT_CACHE[key]
+
+
+@dataclass
+class PDHGResult:
+    x: np.ndarray
+    A: np.ndarray
+    obj: float
+    iters: int
+    primal_res: float
+    dual_res: float
+
+
+@dataclass
+class BatchedPDHGResult:
+    """Padded batch solution: x (B,N,M,H+1), A (B,N,U,H), objs (B,).
+
+    With heterogeneous stacks, slice each element back to its true (N_i,
+    U_i) before use — ``StackedWindows.unstack`` does this.
+    """
+    x: np.ndarray
+    A: np.ndarray
+    objs: np.ndarray
+    iters: int
+
+
+def solve_lp_pdhg(inst: JDCRInstance, iters: int = 4000, check_every: int = 200,
+                  tol: float = 2e-3):
+    x, A = _jitted_kernel(batched=False)(pdhg_data(inst), iters)
     x = np.asarray(x)
     A = np.asarray(A)
     obj = inst.objective(A)
@@ -225,3 +295,19 @@ def solve_lp_pdhg(inst: JDCRInstance, iters: int = 4000, check_every: int = 200,
                  res["A_le_x"], res["one_submodel"])
     return PDHGResult(x=x, A=A, obj=obj, iters=iters,
                       primal_res=float(max(primal, 0.0)), dual_res=0.0)
+
+
+def solve_lp_pdhg_batched(data: PDHGData, iters: int = 4000) -> BatchedPDHGResult:
+    """Solve a whole stack of windows in ONE vmapped, jitted dispatch.
+
+    ``data`` is a :class:`PDHGData` whose every field carries a leading
+    batch axis (build it with ``repro.mec.scenario.stack_instances``).
+    Objectives are exact: padded users carry zero ``prec_u`` and padded
+    base stations hold A == 0 throughout (``bs_mask``), so padding
+    contributes nothing to the einsum.
+    """
+    x, A = _jitted_kernel(batched=True)(data, iters)
+    x = np.asarray(x)
+    A = np.asarray(A)
+    objs = np.einsum("bnuh,buh->b", A, np.asarray(data.prec_u))
+    return BatchedPDHGResult(x=x, A=A, objs=objs, iters=iters)

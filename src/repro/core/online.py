@@ -94,21 +94,27 @@ class OnlineSim:
 
     # ---------------- Eqs. 35–37: routine update ----------------
     def routine_update(self):
+        """Each BS spends its slot budget W_n·Δt on its download queue in
+        (m, h) order — sequential, smaller submodels first; every finished
+        Δ switches the cache to h+1 (Eq. 37).  Vectorized: the per-queue
+        prefix sum of remaining bytes tells how much of each entry the
+        budget reaches, no Python loop over (n, m, h)."""
         N, M, H = self.N, self.M, self.H
-        dt = self.ocfg.slot_s
-        for n in range(N):
-            budget = self.W[n] * dt
-            for m in range(M):
-                for h in range(H):          # sequential: smaller first
-                    if self.O[n, m, h] > 0 and budget > 0:
-                        used = min(self.O[n, m, h], budget)
-                        self.O[n, m, h] -= used
-                        budget -= used
-                        if self.O[n, m, h] <= 1e-12:
-                            self.O[n, m, h] = 0.0
-                            # finished: cache switches to h+1 (Eq. 37)
-                            self.X[n, m, :] = 0
-                            self.X[n, m, h + 1] = 1
+        budget = self.W * self.ocfg.slot_s                      # (N,)
+        O = self.O.reshape(N, M * H)
+        before = np.cumsum(O, axis=1) - O                       # bytes queued ahead
+        take = np.clip(budget[:, None] - before, 0.0, O)
+        O_new = O - take
+        finished = (O > 0) & (O_new <= 1e-12)
+        O_new[finished] = 0.0
+        self.O = O_new.reshape(N, M, H)
+        fin = finished.reshape(N, M, H)
+        done = fin.any(-1)
+        # the LAST finished Δ per (n, m) wins, exactly like the loop did
+        h_top = (H - 1) - np.argmax(fin[:, :, ::-1], axis=-1)   # (N, M)
+        nn, mm = np.nonzero(done)
+        self.X[nn, mm, :] = 0.0
+        self.X[nn, mm, h_top[nn, mm] + 1] = 1.0
         return self.X
 
     # ---------------- Eq. 39/40: latency & QoE (vectorized) ----------------

@@ -6,6 +6,10 @@ Rounding is fully vectorized JAX:
   * routing: Bernoulli φ̃ with success probability A†/x† (Lines 7–13),
     Ã = x̃ · φ̃, ỹ = 1(Σ_h Ã > 0).
 
+``round_solution_batch`` draws *all* ``best_of`` trials as two batched RNG
+ops (one categorical, one bernoulli) instead of a Python loop — every trial
+is iid, so the max over trials keeps Thm 1's guarantee.
+
 Repair (host-side numpy, Sec. V-D "Extension to Practice"):
   1. memory violations: repeatedly shrink the least-beneficial cached
      submodel (or evict to h0), redirecting now-unserved users to the cloud;
@@ -21,8 +25,12 @@ import numpy as np
 from repro.core.jdcr import JDCRInstance
 
 
-def round_solution(inst: JDCRInstance, x_frac, A_frac, key):
-    """Vectorized Alg. 1. Returns integer (x̃ (N,M,H+1), Ã (N,U,H))."""
+def round_solution_batch(inst: JDCRInstance, x_frac, A_frac, key,
+                         n_trials: int = 1):
+    """Alg. 1, ``n_trials`` iid draws in one RNG dispatch.
+
+    Returns integer (x̃ (T,N,M,H+1), Ã (T,N,U,H)) as numpy arrays.
+    """
     N, M, H, U = inst.N, inst.M, inst.H, inst.U
     xf = jnp.asarray(x_frac)
     Af = jnp.asarray(A_frac)
@@ -31,15 +39,24 @@ def round_solution(inst: JDCRInstance, x_frac, A_frac, key):
 
     probs = jnp.clip(xf, 0.0, 1.0)
     probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-12)
-    cat = jax.random.categorical(k1, jnp.log(probs + 1e-12), axis=-1)  # (N,M)
-    x_int = jax.nn.one_hot(cat, H + 1)                                  # (N,M,H+1)
+    logits = jnp.log(probs + 1e-12)                                 # (N,M,H+1)
+    cat = jax.random.categorical(k1, logits[None], axis=-1,
+                                 shape=(n_trials, N, M))
+    x_int = jax.nn.one_hot(cat, H + 1)                              # (T,N,M,H+1)
 
-    xa = xf[:, inst.m_u, 1:]                                            # (N,U,H)
+    xa = xf[:, inst.m_u, 1:]                                        # (N,U,H)
     phi_p = jnp.where(xa > 1e-12, Af / jnp.maximum(xa, 1e-12), 0.0)
-    phi = jax.random.bernoulli(k2, jnp.clip(phi_p, 0.0, 1.0))           # (N,U,H)
-    x_sel = x_int[:, inst.m_u, 1:]                                      # (N,U,H)
+    phi = jax.random.bernoulli(k2, jnp.clip(phi_p, 0.0, 1.0)[None],
+                               shape=(n_trials, N, U, H))
+    x_sel = x_int[:, :, inst.m_u, 1:]                               # (T,N,U,H)
     A_int = x_sel * phi.astype(x_sel.dtype)
     return np.asarray(x_int), np.asarray(A_int)
+
+
+def round_solution(inst: JDCRInstance, x_frac, A_frac, key):
+    """Vectorized Alg. 1. Returns integer (x̃ (N,M,H+1), Ã (N,U,H))."""
+    x_int, A_int = round_solution_batch(inst, x_frac, A_frac, key, n_trials=1)
+    return x_int[0], A_int[0]
 
 
 def _dedupe_routes(inst: JDCRInstance, A):

@@ -1,0 +1,1 @@
+"""Multi-scenario experiment harnesses built on the batched solver."""

@@ -1,9 +1,16 @@
 """MEC scenario: topology + request traces + window-by-window instances
 (paper Sec. VII-A settings by default).
+
+Also the batching layer for the vmapped PDHG solver: ``config_grid``
+expands a base :class:`MECConfig` into a cross-product of variants, and
+``stack_instances`` pads a heterogeneous list of :class:`JDCRInstance`
+windows into one :class:`~repro.core.lp.PDHGData` stack that
+``repro.core.lp.solve_lp_pdhg_batched`` solves in a single dispatch.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import itertools
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
@@ -122,3 +129,91 @@ class Scenario:
             m_u=m_u, d_u=np.full(U, cfg.data_mb),
             ddl=np.full(U, cfg.ddl_s), s_u=s_u, home=home,
             x_prev=np.asarray(x_prev, dtype=np.float64))
+
+
+# ---------------------------------------------------------------------------
+# batching: config grids and stacked instances for the vmapped solver
+# ---------------------------------------------------------------------------
+
+def config_grid(base: MECConfig, axes: dict) -> list:
+    """Cross-product of MECConfig variants.
+
+    ``axes`` maps field names to value lists, e.g.
+    ``{"n_bs": (4, 6), "zipf": (0.4, 0.8)}`` -> 4 configs.  Order is the
+    itertools.product order of ``axes`` (insertion-ordered).
+    """
+    names = list(axes)
+    cfgs = []
+    for combo in itertools.product(*(axes[k] for k in names)):
+        cfgs.append(replace(base, **dict(zip(names, combo))))
+    return cfgs
+
+
+@dataclass
+class StackedWindows:
+    """A padded stack of JDCR windows ready for one vmapped PDHG dispatch.
+
+    ``data`` is a PDHGData pytree with a leading batch axis (padded to the
+    max N and U in the stack); ``n_bs[i]``/``n_users[i]`` are element i's
+    true sizes, used by :meth:`unstack` to slice solutions back out.
+    """
+    data: object                 # PDHGData, batched
+    n_bs: np.ndarray             # (B,)
+    n_users: np.ndarray          # (B,)
+    insts: list = field(default_factory=list)
+
+    def __len__(self):
+        return len(self.n_bs)
+
+    def unstack(self, x, A):
+        """Slice padded batch solutions (B,N,M,H+1), (B,N,U,H) back into
+        per-instance (x_i, A_i) at their true shapes."""
+        out = []
+        for i, (N_i, U_i) in enumerate(zip(self.n_bs, self.n_users)):
+            out.append((np.asarray(x[i, :N_i]), np.asarray(A[i, :N_i, :U_i])))
+        return out
+
+
+def stack_instances(insts: list) -> StackedWindows:
+    """Pad + stack JDCR windows into one PDHGData batch.
+
+    All instances must share the catalog shape (M, H).  N and U may differ:
+    padded base stations are masked out of the kernel entirely (bs_mask
+    zeroes their routing step, so their A stays exactly 0), padded users
+    get zero precision and a zero one-hot row (nothing pulls routing mass
+    toward them, and A <= x pins them at 0).  All pads are zeros, so the
+    real rows see the same preconditioner sums and the same per-iteration
+    updates as a solo solve of their own instance.
+    """
+    from repro.core.lp import PDHGData, pdhg_data
+
+    if not insts:
+        raise ValueError("stack_instances needs at least one instance")
+    M, H = insts[0].M, insts[0].H
+    for inst in insts:
+        if (inst.M, inst.H) != (M, H):
+            raise ValueError(
+                f"heterogeneous catalog shapes: ({inst.M},{inst.H}) vs "
+                f"({M},{H}); stack only varies N/U")
+    N_max = max(inst.N for inst in insts)
+    U_max = max(inst.U for inst in insts)
+
+    fields = {k: [] for k in PDHGData._fields}
+    for inst in insts:
+        d = pdhg_data(inst)
+        dn, du = N_max - inst.N, U_max - inst.U
+        fields["sizes"].append(d.sizes)
+        fields["prec_u"].append(np.pad(d.prec_u, ((0, du), (0, 0))))
+        fields["T"].append(np.pad(d.T, ((0, dn), (0, du), (0, 0))))
+        fields["L"].append(np.pad(d.L, ((0, dn), (0, du), (0, 0))))
+        fields["onehot_mu"].append(np.pad(d.onehot_mu, ((0, du), (0, 0))))
+        fields["R"].append(np.pad(d.R, (0, dn)))
+        fields["ddl"].append(np.pad(d.ddl, (0, du)))
+        fields["s_u"].append(np.pad(d.s_u, (0, du)))
+        fields["bs_mask"].append(np.pad(d.bs_mask, (0, dn)))
+    data = PDHGData(**{k: np.stack(v) for k, v in fields.items()})
+    return StackedWindows(
+        data=data,
+        n_bs=np.array([inst.N for inst in insts]),
+        n_users=np.array([inst.U for inst in insts]),
+        insts=list(insts))

@@ -3,7 +3,10 @@ statistical tests), repair feasibility — including hypothesis property tests
 over random JDCR instances."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - single-example fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import lp as LP
 from repro.core.cocar import cocar_window

@@ -2,7 +2,10 @@
 submodel sizes are monotone, Δ-chains telescope, catalogs are consistent."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - single-example fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro import configs
 from repro.models import partition
