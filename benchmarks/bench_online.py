@@ -1,0 +1,136 @@
+"""Online engine benchmark: NumPy ``OnlineSim`` vs the ``lax.scan`` engine.
+
+Two measurements, persisted as ``results/bench/BENCH_online.json``:
+
+  * **equivalence** — on a fixed stationary-Zipf trace, every policy's
+    per-slot QoE and final cache state must match between the two engines
+    (the scan engine mirrors the NumPy state machine op-for-op, f64);
+  * **throughput** — a >=16-scenario online grid (config variants x trace
+    families, all cocar-ol) through (a) the per-scenario NumPy slot loop
+    and (b) ONE vmapped scan dispatch.  Compile time is reported
+    separately: the steady-state number is what a sweep pays per
+    additional grid, the compile is paid once per process/shape.
+
+Run standalone:  PYTHONPATH=src python -m benchmarks.bench_online
+Quick CI smoke:  PYTHONPATH=src python -m benchmarks.bench_online --smoke
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.online import OnlineConfig, run_online
+from repro.mec.scenario import MECConfig, config_grid
+from repro.traces import draw_decision_stream, make_trace
+from repro.traces import engine as E
+
+ALGOS = ("cocar-ol", "lfu", "lfu-mad", "random")
+
+
+def bench_equivalence(n_users=100, n_slots=30):
+    """Per-policy NumPy-vs-scan parity on one stationary trace."""
+    from repro.core.online import run_online_trace
+
+    cfg = MECConfig(n_users=n_users)
+    ocfg = OnlineConfig(n_slots=n_slots)
+    trace = make_trace("stationary", cfg, n_slots, seed=cfg.seed)
+    stream = draw_decision_stream(n_slots, ocfg.rounds, cfg.n_bs,
+                                  cfg.n_models, cfg.seed + 99)
+    rows = {}
+    for algo in ALGOS:
+        qs, _, sim = run_online_trace(cfg, ocfg, algo, trace, stream)
+        lvl = np.argmax(sim.X, -1)
+        res = E.run_online_scan(cfg, ocfg, algo, trace=trace, stream=stream)
+        gap = float(np.abs(qs - res["slot_qoe"]).max() / max(qs.max(), 1e-9))
+        state_eq = bool((res["final_state"].lvl == lvl).all())
+        rows[algo] = {"max_slot_qoe_relgap": gap, "final_state_equal": state_eq}
+        common.csv_row(f"online_equiv_{algo}", 0,
+                       f"relgap={gap:.2e};state_equal={state_eq}")
+    return rows
+
+
+def _grid_jobs(ocfg, n_users):
+    cfgs = config_grid(MECConfig(n_users=n_users),
+                       {"zipf": (0.4, 0.8),
+                        "mem_capacity_mb": (300.0, 500.0)})
+    traces = ("stationary", "drift", "flash_crowd", "mobility")
+    return [dict(cfg=c, algo="cocar-ol",
+                 trace=make_trace(t, c, ocfg.n_slots, seed=c.seed))
+            for c in cfgs for t in traces]
+
+
+def bench_throughput(n_users=None, n_slots=None):
+    """>=16-scenario cocar-ol grid: NumPy loop vs one vmapped dispatch."""
+    n_users = n_users or (300 if common.FULL else 150)
+    n_slots = n_slots or (100 if common.FULL else 40)
+    ocfg = OnlineConfig(n_slots=n_slots)
+    jobs = _grid_jobs(ocfg, n_users)
+    B = len(jobs)
+    sslots = B * n_slots                          # scenario-slots total
+
+    t0 = time.time()
+    E.run_online_grid(jobs, ocfg)
+    t_first = time.time() - t0
+    t0 = time.time()
+    scan_res = E.run_online_grid(jobs, ocfg)
+    t_scan = time.time() - t0
+
+    t0 = time.time()
+    np_res = [run_online(j["cfg"], ocfg, j["algo"], trace=j["trace"])
+              for j in jobs]
+    t_np = time.time() - t0
+
+    gap = max(abs(a["avg_qoe"] - b["avg_qoe"])
+              for a, b in zip(np_res, scan_res))
+    out = {
+        "scenarios": B,
+        "n_slots": n_slots,
+        "n_users": n_users,
+        "numpy_s": t_np,
+        "scan_s": t_scan,
+        "scan_first_call_s": t_first,
+        "numpy_slots_per_s": sslots / t_np,
+        "scan_slots_per_s": sslots / t_scan,
+        "speedup": t_np / t_scan,
+        "max_avg_qoe_gap": gap,
+    }
+    common.csv_row(f"online_grid_B{B}", t_scan / sslots * 1e6,
+                   f"speedup={out['speedup']:.1f}x;"
+                   f"numpy_slots_s={out['numpy_slots_per_s']:.0f};"
+                   f"scan_slots_s={out['scan_slots_per_s']:.0f};"
+                   f"gap={gap:.2e}")
+    return out
+
+
+def main():
+    out = {"equivalence": bench_equivalence(), "throughput": bench_throughput()}
+    common.save("BENCH_online", out)
+    th = out["throughput"]
+    print(f"online grid ({th['scenarios']} scenarios x {th['n_slots']} "
+          f"slots): scan {th['scan_slots_per_s']:.0f} slots/s vs numpy "
+          f"{th['numpy_slots_per_s']:.0f} slots/s "
+          f"({th['speedup']:.1f}x, compile {th['scan_first_call_s']:.1f}s, "
+          f"max avg-QoE gap {th['max_avg_qoe_gap']:.2e})")
+    return out
+
+
+def smoke():
+    """CI smoke: tiny equivalence + one tiny grid dispatch."""
+    eq = bench_equivalence(n_users=40, n_slots=12)
+    assert all(r["final_state_equal"] for r in eq.values()), eq
+    assert all(r["max_slot_qoe_relgap"] < 1e-9 for r in eq.values()), eq
+    ocfg = OnlineConfig(n_slots=12)
+    res = E.run_online_grid(_grid_jobs(ocfg, 40)[:4], ocfg)
+    assert len(res) == 4 and all(0 <= r["avg_qoe"] <= 1 for r in res)
+    print("online smoke OK: numpy==scan on all policies, grid dispatch ran")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+    else:
+        main()

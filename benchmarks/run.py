@@ -8,8 +8,8 @@ from __future__ import annotations
 
 import time
 
-from benchmarks import bench_kernels, bench_lp, common, motivating_example
-from benchmarks import roofline, serving_slo, tables
+from benchmarks import bench_kernels, bench_lp, bench_online, common
+from benchmarks import motivating_example, roofline, serving_slo, tables
 
 
 def _emit_offline(name, res):
@@ -61,6 +61,7 @@ def main() -> None:
 
     serving_slo.main()
     bench_lp.main()
+    bench_online.main()
     bench_kernels.main()
 
     for mesh in ("16x16", "2x16x16"):

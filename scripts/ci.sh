@@ -8,3 +8,6 @@ if [ "${CI_SKIP_INSTALL:-0}" != "1" ]; then
 fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+# quick online smoke: NumPy OnlineSim == scan engine on every policy
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_online --smoke

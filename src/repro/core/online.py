@@ -9,6 +9,15 @@ Implements faithfully:
   * expected-future-gain caching (Eqs. 45–47) with a memory-constrained
     multi-choice knapsack per adjusted BS (Alg. 2 lines 15–21);
   * eviction/shrink is immediate (Eq. 49).
+
+Workloads come from ``repro.traces``: the whole request stream AND every
+random number the policies consume (``DecisionStream``) are pre-drawn, so
+all four policies replay byte-identical inputs — no policy's RNG
+consumption can perturb another's stream.  ``run_online(..., trace=...)``
+accepts any registered trace family (flash crowds, diurnal load, MMPP
+bursts, mobility, …), and ``backend="scan"`` dispatches the same run to
+the vectorized ``jax.lax.scan`` engine (``repro.traces.engine``), which
+matches this NumPy state machine slot-for-slot.
 """
 from __future__ import annotations
 
@@ -18,6 +27,9 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.mec.scenario import MECConfig, Scenario
+from repro.traces.generators import DecisionStream, Trace, check_trace, \
+    default_stream
+from repro.traces.registry import default_trace
 
 
 @dataclass
@@ -36,17 +48,21 @@ class OnlineConfig:
 
 
 class OnlineSim:
-    """Per-BS popularity request stream + download/cache state machine."""
+    """Download/cache state machine replaying a precomputed request trace.
 
-    def __init__(self, cfg: MECConfig, ocfg: OnlineConfig):
+    The trace (``repro.traces.Trace``) is drawn up front from its own PRNG
+    key; ``draw_slot_requests`` only slices it, so the stream is identical
+    for every policy run against the same (cfg, trace).
+    """
+
+    def __init__(self, cfg: MECConfig, ocfg: OnlineConfig,
+                 trace: Trace = None):
         self.cfg, self.ocfg = cfg, ocfg
         self.sc = Scenario(cfg)
-        rng = self.sc.rng
         N, M, H = cfg.n_bs, cfg.n_models, self.sc.sizes.shape[1] - 1
         self.N, self.M, self.H = N, M, H
-        # per-BS popularity, re-drawn every pop_change_every slots
-        self.pop = np.stack([self._draw_pop() for _ in range(N)])
-        self.pop_next = self.pop.copy()
+        self.trace = check_trace(trace or default_trace(cfg, ocfg),
+                                 cfg, ocfg)
         # state
         self.X = np.zeros((N, M, H + 1))
         self.X[:, :, 0] = 1
@@ -57,10 +73,6 @@ class OnlineSim:
         # θ: minimum achievable end-to-end latency (Eq. 40 normalizer)
         self.theta = self._theta()
 
-    def _draw_pop(self):
-        from repro.mec.scenario import zipf_popularity
-        return zipf_popularity(self.cfg.n_models, self.cfg.zipf, self.sc.rng)
-
     def _theta(self):
         d = self.cfg.data_mb
         comm = d / self.sc.phi.min()
@@ -69,28 +81,8 @@ class OnlineSim:
 
     # ---------------- request stream ----------------
     def draw_slot_requests(self, t):
-        cfg, ocfg = self.cfg, self.ocfg
-        ce = ocfg.pop_change_every
-        if ce and t % ce == ce - ocfg.pop_warmup:
-            self.pop_next = np.stack([self._draw_pop() for _ in range(self.N)])
-        if ce and t % ce == 0 and t > 0:
-            self.pop = self.pop_next.copy()
-        warm = 1.0
-        rng = self.sc.rng
-        home = rng.integers(0, self.N, size=cfg.n_users)
-        m_u = np.empty(cfg.n_users, dtype=int)
-        for n in range(self.N):
-            sel = home == n
-            # warm-up blend toward the next popularity
-            ph = self.pop[n]
-            if ce:
-                k = t % ce
-                if k >= ce - self.ocfg.pop_warmup:
-                    w = (k - (ce - self.ocfg.pop_warmup) + 1) / self.ocfg.pop_warmup
-                    ph = (1 - w) * self.pop[n] + w * self.pop_next[n]
-                    ph = ph / ph.sum()
-            m_u[sel] = rng.choice(self.M, size=sel.sum(), p=ph)
-        return m_u, home
+        """Slot t's (m_u, home) from the precomputed trace."""
+        return self.trace.requests(t)
 
     # ---------------- Eqs. 35–37: routine update ----------------
     def routine_update(self):
@@ -294,32 +286,69 @@ class OnlineSim:
 # ---------------------------------------------------------------------------
 
 def run_online(cfg: MECConfig, ocfg: OnlineConfig, algo: str = "cocar-ol",
-               seed: int = 0):
+               seed: int = 0, trace: Trace = None,
+               stream: DecisionStream = None, backend: str = "numpy"):
+    """Run one (scenario, workload, policy) online trace.
+
+    ``trace`` selects the workload (any ``repro.traces`` family; default is
+    the legacy Zipf/drift stream), ``stream`` the policies' pre-drawn
+    randomness, ``backend`` the engine: ``"numpy"`` is this module's
+    per-slot state machine, ``"scan"`` the jit-compiled ``lax.scan`` engine
+    (identical results, one XLA dispatch for the whole run).
+    """
     cfg = MECConfig(**{**cfg.__dict__, "seed": seed})
-    sim = OnlineSim(cfg, ocfg)
-    rng = np.random.default_rng(seed + 99)
-    total_qoe, total_hits, total_users = 0.0, 0, 0
+    if trace is None:
+        trace = default_trace(cfg, ocfg)
+    check_trace(trace, cfg, ocfg)
+    if stream is None:
+        stream = default_stream(cfg, ocfg, seed)
+    if backend == "scan":
+        from repro.traces.engine import run_online_scan
+        res = run_online_scan(cfg, ocfg, algo, seed=seed, trace=trace,
+                              stream=stream)
+        return {"avg_qoe": res["avg_qoe"], "hit_rate": res["hit_rate"]}
+    if backend != "numpy":
+        raise ValueError(f"unknown backend {backend!r}")
+    slot_qoe, slot_hits, _ = run_online_trace(cfg, ocfg, algo, trace, stream)
+    total_users = int(trace.mask.sum())
+    return {"avg_qoe": float(slot_qoe.sum()) / max(total_users, 1),
+            "hit_rate": float(slot_hits.sum()) / max(total_users, 1)}
+
+
+def run_online_trace(cfg: MECConfig, ocfg: OnlineConfig, algo: str,
+                     trace: Trace, stream: DecisionStream):
+    """The NumPy per-slot loop with per-slot recording.
+
+    This is THE reference slot ordering (downloads -> routing -> history
+    push -> policy) — ``run_online`` wraps it, and the scan-engine
+    equivalence checks (``tests/test_traces.py``,
+    ``benchmarks/bench_online.py``) compare against it directly, so any
+    change here is exercised by them.  Returns
+    ``(slot_qoe (T,), slot_hits (T,), sim)``.
+    """
+    sim = OnlineSim(cfg, ocfg, trace=trace)
+    slot_qoe, slot_hits = [], []
     for t in range(ocfg.n_slots):
         sim.routine_update()
         m_u, home = sim.draw_slot_requests(t)
         q, hits = sim.route(m_u, home)
-        total_qoe += q
-        total_hits += hits
-        total_users += len(m_u)
+        slot_qoe.append(q)
+        slot_hits.append(hits)
         counts = np.zeros((sim.N, sim.M))
         np.add.at(counts, (home, m_u), 1.0)
         sim.hist.append(counts)
         if algo == "cocar-ol":
-            for n in rng.integers(0, sim.N, size=ocfg.rounds):
+            for n in stream.adjust_ns[t]:
                 sim.adjust_bs(n)
         elif algo in ("lfu", "lfu-mad"):
-            _lfu_step(sim, rng, ocfg, mad=(algo == "lfu-mad"))
+            _lfu_step(sim, stream.adjust_ns[t], ocfg,
+                      mad=(algo == "lfu-mad"))
         elif algo == "random":
-            _random_step(sim, rng, ocfg)
+            _random_step(sim, stream.adjust_ns[t], stream.u_model[t],
+                         stream.perms[t], stream.u_shrink[t], ocfg)
         else:
             raise ValueError(algo)
-    return {"avg_qoe": total_qoe / total_users,
-            "hit_rate": total_hits / total_users}
+    return np.asarray(slot_qoe), np.asarray(slot_hits), sim
 
 
 def _freq_weighted(sim: OnlineSim, mad: bool):
@@ -331,14 +360,15 @@ def _freq_weighted(sim: OnlineSim, mad: bool):
     return sum(wi * h for wi, h in zip(w, sim.hist))
 
 
-def _lfu_step(sim: OnlineSim, rng, ocfg: OnlineConfig, mad=False):
+def _lfu_step(sim: OnlineSim, ns, ocfg: OnlineConfig, mad=False):
     """LFU / LFU-MAD: enlarge the most frequent model at the BS (+1-hop
-    neighbours' demand), shrink the least frequent until memory fits."""
+    neighbours' demand), shrink the least frequent until memory fits.
+    Sorts are stable so the scan engine reproduces identical tie-breaks."""
     freq = _freq_weighted(sim, mad)
     adj = sim.sc.hops <= 1
-    for n in rng.integers(0, sim.N, size=ocfg.rounds):
+    for n in ns:
         f = freq[adj[n]].sum(0)                           # (M,)
-        order = np.argsort(-f)
+        order = np.argsort(-f, kind="stable")
         sc = sim.sc
         top = next((m for m in order if sim.O[n, m].sum() == 0), None)
         if top is None:
@@ -351,7 +381,7 @@ def _lfu_step(sim: OnlineSim, rng, ocfg: OnlineConfig, mad=False):
         used = sum(sc.sizes[m2, int(np.argmax(sim.X[n, m2]))]
                    for m2 in range(sim.M))
         used += max(sc.sizes[top, tgt] - sc.sizes[top, cur] * (cur > 0), 0)
-        for m2 in np.argsort(f):
+        for m2 in np.argsort(f, kind="stable"):
             if used <= sc.R[n]:
                 break
             if m2 == top:
@@ -369,13 +399,17 @@ def _lfu_step(sim: OnlineSim, rng, ocfg: OnlineConfig, mad=False):
             sim.target[n, top] = tgt
 
 
-def _random_step(sim: OnlineSim, rng, ocfg: OnlineConfig):
+def _random_step(sim: OnlineSim, ns, u_model, perms, u_shrink,
+                 ocfg: OnlineConfig):
+    """Random baseline driven by the pre-drawn uniforms, so its RNG
+    consumption is fixed-shape (state-independent) and replayable."""
     sc = sim.sc
-    for n in rng.integers(0, sim.N, size=ocfg.rounds):
+    for j, n in enumerate(ns):
         candidates = [m for m in range(sim.M) if sim.O[n, m].sum() == 0]
         if not candidates:
             continue
-        m = candidates[rng.integers(len(candidates))]
+        m = candidates[min(int(u_model[j] * len(candidates)),
+                           len(candidates) - 1)]
         cur = int(np.argmax(sim.X[n, m]))
         tgt = min(cur + 1, sim.H) if ocfg.partition else sim.H
         if tgt == cur:
@@ -383,14 +417,16 @@ def _random_step(sim: OnlineSim, rng, ocfg: OnlineConfig):
         used = sum(sc.sizes[m2, int(np.argmax(sim.X[n, m2]))]
                    for m2 in range(sim.M))
         used += sc.sizes[m, tgt] - (sc.sizes[m, cur] if cur else 0.0)
-        others = [m2 for m2 in rng.permutation(sim.M) if m2 != m]
-        for m2 in others:
+        for m2 in perms[j]:
+            if m2 == m:
+                continue
             if used <= sc.R[n]:
                 break
             c2 = int(np.argmax(sim.X[n, m2]))
             if c2 == 0:
                 continue
-            new2 = rng.integers(0, c2) if ocfg.partition else 0
+            new2 = min(int(u_shrink[j, m2] * c2), c2 - 1) \
+                if ocfg.partition else 0
             used -= sc.sizes[m2, c2] - sc.sizes[m2, new2]
             sim.X[n, m2, :] = 0
             sim.X[n, m2, new2] = 1

@@ -1,16 +1,24 @@
-"""Scenario-grid sweep through the batched PDHG solver.
+"""Scenario-grid sweeps: the batched PDHG solver (offline) and the
+vmapped scan engine (online).
 
-Fans a cross-product of :class:`MECConfig` variants (topology size, Zipf
-skew, memory capacity, deadline — the axes of the paper's Sec. VII
-comparisons) into per-variant JDCR windows, solves ALL of them in one
-vmapped PDHG dispatch (``cocar_windows_batched``), and emits one flat
+Offline: fans a cross-product of :class:`MECConfig` variants (topology
+size, Zipf skew, memory capacity, deadline — the axes of the paper's
+Sec. VII comparisons) into per-variant JDCR windows, solves ALL of them in
+one vmapped PDHG dispatch (``cocar_windows_batched``), and emits one flat
 results table: a list of row dicts, each carrying the swept axis values,
 the LP objective, and the post-rounding window metrics.
 
-``benchmarks/tables.py::sweep_table`` persists the table next to the other
-paper tables; run standalone with
+Online: ``run_online_sweep`` crosses config variants with *trace families*
+(``repro.traces``: flash crowds, diurnal load, MMPP bursts, mobility, …)
+and policies, and runs the whole grid in ONE ``lax.scan``+vmap dispatch
+(``repro.traces.engine.run_online_grid``) instead of per-scenario Python
+slot loops.
 
-    PYTHONPATH=src python -m repro.experiments.sweep
+``benchmarks/tables.py::sweep_table`` persists the offline table next to
+the other paper tables; run standalone with
+
+    PYTHONPATH=src python -m repro.experiments.sweep            # offline
+    PYTHONPATH=src python -m repro.experiments.sweep --online   # online
 """
 from __future__ import annotations
 
@@ -57,6 +65,47 @@ def run_sweep(base: MECConfig = None, axes: dict = None, window: int = 0,
     return rows
 
 
+#: Default online sweep: 2 config axes x 2 trace families x 2 policies
+#: = 16 scenarios, one vmapped scan dispatch.
+DEFAULT_ONLINE_AXES = {
+    "zipf": (0.4, 0.8),
+    "mem_capacity_mb": (300.0, 500.0),
+}
+DEFAULT_TRACES = ("stationary", "flash_crowd")
+DEFAULT_POLICIES = ("cocar-ol", "lfu")
+
+
+def run_online_sweep(base: MECConfig = None, axes: dict = None,
+                     traces=DEFAULT_TRACES, policies=DEFAULT_POLICIES,
+                     ocfg=None, seed: int = 0):
+    """Cross (config grid x trace family x policy), run everything in one
+    vmapped scan dispatch.  Returns a list of row dicts in grid order."""
+    from repro.core.online import OnlineConfig
+    from repro.traces.engine import run_online_grid
+    from repro.traces.registry import make_trace
+
+    base = base or MECConfig(n_users=150)
+    axes = axes or DEFAULT_ONLINE_AXES
+    ocfg = ocfg or OnlineConfig(n_slots=60)
+    cfgs = config_grid(base, axes)
+    jobs, keys = [], []
+    for cfg in cfgs:
+        for tname in traces:
+            trace = make_trace(tname, cfg, ocfg.n_slots, seed=seed)
+            for algo in policies:
+                jobs.append(dict(cfg=cfg, algo=algo, trace=trace,
+                                 seed=seed))
+                keys.append((cfg, tname, algo))
+    results = run_online_grid(jobs, ocfg)
+    rows = []
+    for (cfg, tname, algo), res in zip(keys, results):
+        row = {k: getattr(cfg, k) for k in axes}
+        row.update(trace=tname, algo=algo, avg_qoe=res["avg_qoe"],
+                   hit_rate=res["hit_rate"])
+        rows.append(row)
+    return rows
+
+
 def format_table(rows) -> str:
     """Fixed-width text rendering of a sweep table."""
     if not rows:
@@ -72,16 +121,21 @@ def format_table(rows) -> str:
     return "\n".join(lines)
 
 
-def main():
-    rows = run_sweep()
+def main(online: bool = False):
+    if online:
+        rows, name = run_online_sweep(), "online_grid.json"
+    else:
+        rows, name = run_sweep(), "grid.json"
     print(format_table(rows))
     out = pathlib.Path("results") / "sweep"
     out.mkdir(parents=True, exist_ok=True)
-    path = out / "grid.json"
+    path = out / name
     path.write_text(json.dumps(rows, indent=1, default=float))
     print(f"\n{len(rows)} variants -> {path}")
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    main(online="--online" in sys.argv[1:])

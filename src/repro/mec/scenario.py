@@ -108,6 +108,13 @@ class Scenario:
         if ce and window > 0 and window % ce == 0:
             self.pop = self.pop[self.rng.permutation(len(self.pop))]
 
+    def trace(self, name: str, n_slots: int, seed: int = None, **kw):
+        """Build a named online workload (``repro.traces``) for this
+        scenario's config — e.g. ``sc.trace("flash_crowd", 100)``."""
+        from repro.traces.registry import make_trace
+        seed = self.cfg.seed if seed is None else seed
+        return make_trace(name, self.cfg, n_slots, seed=seed, **kw)
+
     def draw_requests(self, n_users=None):
         cfg = self.cfg
         U = n_users or cfg.n_users

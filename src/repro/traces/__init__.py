@@ -1,0 +1,18 @@
+"""Trace workload subsystem: precomputed request streams + the
+device-resident online engine.
+
+- ``repro.traces.generators`` — workload families as pure functions of a
+  PRNG key (``Trace`` tensors every policy replays identically);
+- ``repro.traces.registry`` — names them for sweeps;
+- ``repro.traces.engine`` — the ``jax.lax.scan`` online engine (imported
+  lazily: ``from repro.traces import engine``) that runs CoCaR-OL and the
+  online baselines slot-by-slot on device, vmappable across
+  (scenario, trace, seed, policy).
+"""
+from repro.traces.generators import (DecisionStream, Trace, check_trace,
+                                     default_stream, draw_decision_stream)
+from repro.traces.registry import available, default_trace, make_trace
+
+__all__ = ["Trace", "DecisionStream", "check_trace", "default_stream",
+           "draw_decision_stream", "available", "default_trace",
+           "make_trace"]

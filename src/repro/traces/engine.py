@@ -1,0 +1,535 @@
+"""Device-resident online engine: CoCaR-OL (Alg. 2) and the online
+baselines as one ``jax.lax.scan`` over slots.
+
+The NumPy ``repro.core.online.OnlineSim`` runs one (scenario, policy) at a
+time in Python — a per-slot state machine.  This module re-implements the
+same math as a pure function of a state pytree:
+
+  * :class:`OnlineState` — ``lvl (N, M)`` cached-submodel index (the
+    one-hot ``X`` of Eqs. 35–37 stored as its argmax), ``O (N, M, H)``
+    remaining download MB per Δ component, ``target (N, M)`` in-flight
+    download targets, ``hist (P, N, M)`` request-count ring buffer
+    (the ΔT^P window of Eq. 45);
+  * ``_routine_update`` — the download state machine (Eqs. 35–37);
+  * ``_qoe_best`` — QoE (Eq. 40) + argmax-QoE routing (Eq. 41);
+  * ``_adjust_bs`` — expected-future-gain caching (Eqs. 45–47) with the
+    greedy multi-choice knapsack fit and immediate shrink (Eq. 49),
+    evaluated for the whole (M, H+1) candidate grid at once;
+  * ``_lfu_step`` / ``_random_step`` — the online baselines.
+
+Every slot consumes only precomputed tensors (the trace's per-slot request
+counts and the pre-drawn :class:`~repro.traces.generators.DecisionStream`),
+so a whole run is ONE ``lax.scan`` dispatch, and ``run_online_grid`` vmaps
+it across (scenario × trace × seed × policy) — a 64-element online grid is
+a single XLA program instead of 64 Python slot loops.
+
+Numerics: the engine mirrors ``OnlineSim`` op-for-op (same stable sort
+orders, same thresholds) and runs in float64 (``jax.experimental
+.enable_x64``), so per-slot QoE and final cache state match the NumPy
+engine to ~1e-12 — asserted in ``tests/test_traces.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.traces.generators import DecisionStream, check_trace, \
+    default_stream
+
+POLICIES = ("cocar-ol", "lfu", "lfu-mad", "random")
+LFU_MAD_DECAY = 0.8              # matches online._freq_weighted
+
+
+class OnlineParams(NamedTuple):
+    """Static per-scenario arrays (all float64/int — vmappable leading
+    batch axis in ``run_online_grid``)."""
+    sizes: object                # (M, H+1) MB
+    prec: object                 # (M, H+1)
+    flops: object                # (M, H+1) GFLOP per MB (c_h)
+    comm: object                 # (N, N) comm latency home->target (Eq. 39)
+    C: object                    # (N,) GFLOPS
+    R: object                    # (N,) MB
+    W: object                    # (N,) MB/s cloud->BS
+    adj1: object                 # (N, N) 1.0 where hops <= 1 (LFU pooling)
+    theta: object                # () Eq. 40 normalizer
+    ddl: object                  # ()
+    alpha: object                # ()
+    gamma: object                # ()
+    dT_future: object            # ()
+    data_mb: object              # ()
+    slot_s: object               # ()
+    n_users: object              # () QoE scale of Eq. 46
+    partition: object            # () bool — dynamic-DNN switching enabled
+
+
+class OnlineState(NamedTuple):
+    lvl: object                  # (N, M) int32 cached submodel index
+    O: object                    # (N, M, H) remaining download MB
+    target: object               # (N, M) int32 download target
+    hist: object                 # (P, N, M) request-count ring buffer
+
+
+def make_params(cfg, ocfg, sc=None) -> OnlineParams:
+    """Extract the engine's arrays from a scenario (host numpy, float64)."""
+    from repro.mec.scenario import Scenario
+
+    sc = sc or Scenario(cfg)
+    N = cfg.n_bs
+    d = cfg.data_mb
+    comm = (d / sc.phi)[:, None] \
+        + np.where(np.eye(N, dtype=bool), 0.0, d / (cfg.wired_mbps / 8.0)) \
+        + sc.lam
+    infer_min = (sc.flops[:, 1] * d / sc.C.max()).min()
+    theta = d / sc.phi.min() + 2 * cfg.hop_latency_s + infer_min
+    return OnlineParams(
+        sizes=np.asarray(sc.sizes, np.float64),
+        prec=np.asarray(sc.prec, np.float64),
+        flops=np.asarray(sc.flops, np.float64),
+        comm=np.asarray(comm, np.float64),
+        C=np.asarray(sc.C, np.float64),
+        R=np.asarray(sc.R, np.float64),
+        W=np.full(N, cfg.cloud_mbps / 8.0),
+        adj1=(sc.hops <= 1).astype(np.float64),
+        theta=np.float64(theta),
+        ddl=np.float64(cfg.ddl_s),
+        alpha=np.float64(ocfg.alpha),
+        gamma=np.float64(ocfg.gamma),
+        dT_future=np.float64(ocfg.dT_future),
+        data_mb=np.float64(d),
+        slot_s=np.float64(ocfg.slot_s),
+        n_users=np.float64(cfg.n_users),
+        partition=np.bool_(ocfg.partition))
+
+
+def init_state(params: OnlineParams, dT_past: int) -> OnlineState:
+    M, Hp1 = np.shape(params.sizes)[-2:]
+    N = np.shape(params.R)[-1]
+    return OnlineState(
+        lvl=np.zeros((N, M), np.int32),
+        O=np.zeros((N, M, Hp1 - 1), np.float64),
+        target=np.zeros((N, M), np.int32),
+        hist=np.zeros((dT_past, N, M), np.float64))
+
+
+# ---------------------------------------------------------------------------
+# kernels (pure jnp functions of (params, state))
+# ---------------------------------------------------------------------------
+
+def _routine_update(p, st):
+    """Eqs. 35–37: each BS spends W_n·Δt on its (m, h)-ordered download
+    queue; every finished Δ switches the cache to h+1."""
+    import jax.numpy as jnp
+
+    N, M, H = st.O.shape
+    budget = p.W * p.slot_s
+    O = st.O.reshape(N, M * H)
+    before = jnp.cumsum(O, axis=1) - O
+    take = jnp.clip(budget[:, None] - before, 0.0, O)
+    O_new = O - take
+    finished = (O > 0) & (O_new <= 1e-12)
+    O_new = jnp.where(finished, 0.0, O_new)
+    fin = finished.reshape(N, M, H)
+    done = fin.any(-1)
+    h_top = (H - 1) - jnp.argmax(fin[:, :, ::-1], axis=-1)
+    lvl = jnp.where(done, h_top.astype(jnp.int32) + 1, st.lvl)
+    return st._replace(lvl=lvl, O=O_new.reshape(N, M, H))
+
+
+def _qoe_best(p, lvl):
+    """Eqs. 39–41: per-(home BS, model) best QoE over routing targets."""
+    import jax.numpy as jnp
+
+    M = lvl.shape[-1]
+    ms = jnp.arange(M)
+    P = p.prec[ms[None, :], lvl]                       # (N, M)
+    c = p.flops[ms[None, :], lvl]
+    infer = c * p.data_mb / p.C[:, None]               # (N_tgt, M)
+    lat = p.comm[:, :, None] + infer[None]             # (Nh, Nt, M)
+    q = P[None] * jnp.clip(1.0 - (lat - p.theta) * p.alpha, 0.0, None)
+    q = jnp.where((P[None] > 0) & (lat <= p.ddl), q, 0.0)
+    return q.max(axis=1)                               # (Nh, M)
+
+
+def _seq_sum(rows, mask=None):
+    """Left-to-right sequential accumulation (static Python loop).
+
+    Decision-critical sums are accumulated in exactly the order the NumPy
+    engine uses — identical f64 values added in identical order are
+    bit-exact, so threshold/sort decisions cannot diverge between the two
+    engines.  ``mask`` rows contribute an exact +0.0 (a no-op), matching
+    NumPy's boolean-subset sums.
+    """
+    acc = rows[0] * (mask[0] if mask is not None else 1.0)
+    for i in range(1, rows.shape[0]):
+        acc = acc + rows[i] * (mask[i] if mask is not None else 1.0)
+    return acc
+
+
+def _freq(st):
+    """Eq. 45: request proportions over the ΔT^P window."""
+    import jax.numpy as jnp
+
+    tot = st.hist.sum()
+    return st.hist.sum(0) / jnp.maximum(tot, 1.0)
+
+
+def _slot_qoe(p, freqNM, lvl):
+    """Expected one-slot total QoE under cache state ``lvl`` (Eq. 46)."""
+    return (freqNM * _qoe_best(p, lvl)).sum() * p.n_users
+
+
+def _adjust_bs(p, st, n):
+    """Alg. 2 lines 15–21 at BS n: evaluate the whole (M, H+1) candidate
+    grid — action-space filter, knapsack fit, expected future gain — and
+    apply the argmax candidate (first-wins on ties, like the Python loop).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    N, M = st.lvl.shape
+    H = st.O.shape[-1]
+    K = M * (H + 1)
+    ms = jnp.arange(M)
+    freqNM = _freq(st)
+    fM = _seq_sum(freqNM)                              # (M,) demand weight
+    cur = st.lvl[n]                                    # (M,)
+    dl = st.O[n].sum(-1) > 0                           # (M,)
+    dlbudget = p.W[n] * p.slot_s
+
+    cand_m = jnp.repeat(ms, H + 1)                     # (K,)
+    cand_h = jnp.tile(jnp.arange(H + 1), M).astype(jnp.int32)
+    cur_k = cur[cand_m]
+    shrink = cand_h < cur_k
+    enlarge = cand_h > cur_k
+    # Sec. VI-B action space: enlargements up to (and incl.) the first
+    # whose cumulative Δ overruns one slot budget
+    sz_prev = p.sizes[cand_m, jnp.maximum(cand_h - 1, 0)]
+    enl_ok = jnp.where(p.partition,
+                       sz_prev - p.sizes[cand_m, cur_k] <= dlbudget,
+                       cand_h == H)
+    valid = (~dl[cand_m]) & (cand_h >= 1) & (shrink | (enlarge & enl_ok))
+
+    # ---- _fit: greedy multi-choice knapsack, all candidates at once ----
+    need = p.sizes[cand_m, cand_h]
+    locked = dl[None, :] & (ms[None, :] != cand_m[:, None])      # (K, M)
+    locked_sz = p.sizes[ms, st.target[n]]
+    budget0 = p.R[n] - need
+    for m2 in range(M):                                # sequential, like _fit
+        budget0 = budget0 - jnp.where(locked[:, m2], locked_sz[m2], 0.0)
+    feasible = budget0 >= 0
+    order = jnp.argsort(-fM)                           # stable, high f first
+
+    choice0 = jnp.where(locked, cur[None, :], 0)
+
+    def knap_step(carry, m2):
+        budget, choice = carry
+        is_free = (m2 != cand_m) & (~dl[m2])           # (K,)
+        cur2 = cur[m2]
+        fits = p.sizes[m2][None, :] <= budget[:, None] + 1e-9
+        h2_part = jnp.clip(jnp.minimum(cur2, fits.sum(-1) - 1), 0)
+        h2_full = jnp.where((cur2 == H) & (p.sizes[m2, H] <= budget + 1e-9),
+                            H, 0)
+        h2 = jnp.where(p.partition, h2_part, h2_full)
+        h2 = jnp.where(is_free, h2, choice[:, m2]).astype(jnp.int32)
+        budget = budget - jnp.where(is_free, p.sizes[m2, h2], 0.0)
+        return (budget, choice.at[:, m2].set(h2)), None
+
+    (_, choice), _ = jax.lax.scan(knap_step, (budget0, choice0), order)
+
+    k_idx = jnp.arange(K)
+    lvl_hyp = choice.at[k_idx, cand_m].set(cand_h)     # (K, M) rows at n
+    lvl_dur = choice.at[k_idx, cand_m].set(cur_k)      # upgrade pending
+
+    # Eq. 46/47 matched-horizon discounted gain
+    delta = jnp.where(p.partition,
+                      p.sizes[cand_m, cand_h] - p.sizes[cand_m, cur_k],
+                      p.sizes[cand_m, cand_h])
+    delay = jnp.where(enlarge, jnp.ceil(delta / dlbudget), 0.0)
+
+    full = jnp.broadcast_to(st.lvl, (K, N, M))
+    g_cur = _slot_qoe(p, freqNM, st.lvl)
+    g_hyp = jax.vmap(lambda L: _slot_qoe(p, freqNM, L))(
+        full.at[k_idx, n].set(lvl_hyp))
+    g_dur = jax.vmap(lambda L: _slot_qoe(p, freqNM, L))(
+        full.at[k_idx, n].set(lvl_dur))
+    gam = p.gamma
+    geo = lambda D: gam * (1 - gam ** D) / (1 - gam)   # sum_{k=1}^D gam^k
+    gain = geo(delay) * (g_dur - g_cur) \
+        + gam ** delay * geo(p.dT_future) * (g_hyp - g_cur)
+
+    gains = jnp.where(valid & feasible, gain, -jnp.inf)
+    k_best = jnp.argmax(gains)
+    act = gains[k_best] > 1e-9
+    mb, hb = cand_m[k_best], cand_h[k_best]
+    curb = cur[mb]
+    row = choice[k_best].at[mb].set(jnp.where(hb < curb, hb, curb))
+    lvl = st.lvl.at[n].set(jnp.where(act, row, st.lvl[n]))
+
+    enl = act & (hb > curb)                            # Eq. 48 downloads
+    h_axis = jnp.arange(1, H + 1)
+    Orow = jnp.where(p.partition,
+                     jnp.where((h_axis > curb) & (h_axis <= hb),
+                               p.sizes[mb, 1:] - p.sizes[mb, :-1], 0.0),
+                     jnp.where(h_axis == hb, p.sizes[mb, hb], 0.0))
+    O = st.O.at[n, mb].set(jnp.where(enl, Orow, st.O[n, mb]))
+    target = st.target.at[n, mb].set(
+        jnp.where(enl, hb, st.target[n, mb]))
+    return st._replace(lvl=lvl, O=O, target=target)
+
+
+def _lfu_step(p, st, n, mad):
+    """LFU / LFU-MAD at BS n: enlarge the most frequent non-downloading
+    model (pooling 1-hop neighbour demand), shrink least-frequent to fit."""
+    import jax
+    import jax.numpy as jnp
+
+    N, M = st.lvl.shape
+    H = st.O.shape[-1]
+    P = st.hist.shape[0]
+    ms = jnp.arange(M)
+    if mad:
+        w = LFU_MAD_DECAY ** (P - 1 - jnp.arange(P))
+        fW = _seq_sum(st.hist * w[:, None, None])
+    else:
+        fW = st.hist.sum(0)                            # integer-exact
+    f = _seq_sum(fW, mask=p.adj1[n])                   # (M,) 1-hop pooling
+    order = jnp.argsort(-f)                            # stable
+    dl = st.O[n].sum(-1) > 0
+    free_in_order = ~dl[order]
+    exists = free_in_order.any()
+    top = order[jnp.argmax(free_in_order)]
+    cur = st.lvl[n, top]
+    tgt = jnp.where(p.partition, jnp.minimum(cur + 1, H), H)
+    act0 = exists & (tgt != cur)
+    used = _seq_sum(p.sizes[ms, st.lvl[n]]) + jnp.maximum(
+        p.sizes[top, tgt] - p.sizes[top, cur] * (cur > 0), 0.0)
+
+    def shrink_step(carry, m2):
+        used, lvln = carry
+        c2 = lvln[m2]
+        cond = act0 & (used > p.R[n]) & (m2 != top) & (c2 > 0)
+        new2 = jnp.where(p.partition, c2 - 1, 0)
+        used = used - jnp.where(cond,
+                                p.sizes[m2, c2] - p.sizes[m2, new2], 0.0)
+        return (used, lvln.at[m2].set(jnp.where(cond, new2, c2))), None
+
+    (used, lvln), _ = jax.lax.scan(shrink_step, (used, st.lvl[n]),
+                                   jnp.argsort(f))
+    fin = act0 & (used <= p.R[n])
+    delta = p.sizes[top, tgt] - jnp.where(p.partition & (cur > 0),
+                                          p.sizes[top, cur], 0.0)
+    O = st.O.at[n, top, tgt - 1].set(
+        jnp.where(fin, jnp.maximum(delta, 0.0), st.O[n, top, tgt - 1]))
+    target = st.target.at[n, top].set(
+        jnp.where(fin, tgt.astype(jnp.int32), st.target[n, top]))
+    return st._replace(lvl=st.lvl.at[n].set(lvln), O=O, target=target)
+
+
+def _random_step(p, st, n, u_m, perm, u_shr):
+    """Random baseline at BS n, driven by the pre-drawn uniforms."""
+    import jax
+    import jax.numpy as jnp
+
+    N, M = st.lvl.shape
+    H = st.O.shape[-1]
+    ms = jnp.arange(M)
+    dl = st.O[n].sum(-1) > 0
+    free = ~dl
+    n_free = free.sum()
+    idx = jnp.minimum((u_m * n_free).astype(jnp.int32),
+                      jnp.maximum(n_free - 1, 0))
+    m = jnp.argmax((jnp.cumsum(free) - 1 == idx) & free)
+    cur = st.lvl[n, m]
+    tgt = jnp.where(p.partition, jnp.minimum(cur + 1, H), H)
+    act0 = (n_free > 0) & (tgt != cur)
+    used = _seq_sum(p.sizes[ms, st.lvl[n]]) + p.sizes[m, tgt] \
+        - jnp.where(cur > 0, p.sizes[m, cur], 0.0)
+
+    def shrink_step(carry, m2):
+        used, lvln = carry
+        c2 = lvln[m2]
+        cond = act0 & (m2 != m) & (used > p.R[n]) & (c2 > 0)
+        new2 = jnp.where(p.partition,
+                         jnp.minimum((u_shr[m2] * c2).astype(jnp.int32),
+                                     jnp.maximum(c2 - 1, 0)), 0)
+        used = used - jnp.where(cond,
+                                p.sizes[m2, c2] - p.sizes[m2, new2], 0.0)
+        return (used, lvln.at[m2].set(jnp.where(cond, new2, c2))), None
+
+    (used, lvln), _ = jax.lax.scan(shrink_step, (used, st.lvl[n]), perm)
+    fin = act0 & (used <= p.R[n])
+    delta = p.sizes[m, tgt] - jnp.where(p.partition & (cur > 0),
+                                        p.sizes[m, cur], 0.0)
+    O = st.O.at[n, m, tgt - 1].set(
+        jnp.where(fin, jnp.maximum(delta, 0.0), st.O[n, m, tgt - 1]))
+    target = st.target.at[n, m].set(
+        jnp.where(fin, tgt.astype(jnp.int32), st.target[n, m]))
+    return st._replace(lvl=st.lvl.at[n].set(lvln), O=O, target=target)
+
+
+# ---------------------------------------------------------------------------
+# the scan
+# ---------------------------------------------------------------------------
+
+def _slot_step(p, policy, st, xs):
+    """One slot: downloads -> routing/QoE -> history push -> policy."""
+    import jax
+    import jax.numpy as jnp
+
+    counts, ns, u_model, perms, u_shrink = xs
+    st = _routine_update(p, st)
+    best = _qoe_best(p, st.lvl)
+    qoe = (counts * best).sum()
+    hits = (counts * (best > 0)).sum()
+    st = st._replace(hist=jnp.concatenate([st.hist[1:], counts[None]]))
+    rounds = ns.shape[0]
+    js = jnp.arange(rounds)
+
+    def rounds_scan(step_fn):
+        def run(s):
+            return jax.lax.scan(lambda s_, j: (step_fn(s_, j), None),
+                                s, js)[0]
+        return run
+
+    st = jax.lax.switch(policy, [
+        rounds_scan(lambda s, j: _adjust_bs(p, s, ns[j])),
+        rounds_scan(lambda s, j: _lfu_step(p, s, ns[j], mad=False)),
+        rounds_scan(lambda s, j: _lfu_step(p, s, ns[j], mad=True)),
+        rounds_scan(lambda s, j: _random_step(p, s, ns[j], u_model[j],
+                                              perms[j], u_shrink[j])),
+    ], st)
+    return st, (qoe, hits)
+
+
+def _scan_run(p, st0, counts, ns, u_model, perms, u_shrink, policy):
+    import jax
+
+    def step(st, xs):
+        return _slot_step(p, policy, st, xs)
+
+    stF, (qoe, hits) = jax.lax.scan(step, st0,
+                                    (counts, ns, u_model, perms, u_shrink))
+    return stF, qoe, hits
+
+
+@functools.cache
+def _compiled(batched: bool):
+    import jax
+
+    fn = _scan_run
+    if batched:
+        fn = jax.vmap(fn)
+    return jax.jit(fn)
+
+
+def _policy_id(algo: str) -> int:
+    try:
+        return POLICIES.index(algo)
+    except ValueError:
+        raise ValueError(f"unknown online policy {algo!r}; "
+                         f"one of {POLICIES}")
+
+
+def run_scan(params: OnlineParams, counts, stream: DecisionStream,
+             algo: str = "cocar-ol", dT_past: int = 10):
+    """One scenario through the compiled scan.  Returns the summary dict of
+    ``run_online`` plus per-slot arrays and the final state."""
+    from jax.experimental import enable_x64
+
+    st0 = init_state(params, dT_past)
+    with enable_x64():
+        stF, qoe, hits = _compiled(False)(
+            params, st0, np.asarray(counts, np.float64),
+            stream.adjust_ns, stream.u_model, stream.perms, stream.u_shrink,
+            _policy_id(algo))
+    # pull to host BEFORE reducing: np.sum on a device array would
+    # re-enter jnp outside the x64 context and downcast to f32
+    qoe, hits = np.asarray(qoe), np.asarray(hits)
+    total = float(np.asarray(counts).sum())
+    return {
+        "avg_qoe": float(qoe.sum()) / max(total, 1.0),
+        "hit_rate": float(hits.sum()) / max(total, 1.0),
+        "slot_qoe": qoe,
+        "slot_hits": hits,
+        "final_state": OnlineState(*(np.asarray(x) for x in stF)),
+    }
+
+
+def run_online_scan(cfg, ocfg, algo: str = "cocar-ol", seed: int = 0,
+                    trace=None, stream: DecisionStream = None):
+    """Drop-in scan-engine counterpart of ``online.run_online``."""
+    from dataclasses import replace
+
+    from repro.traces.registry import default_trace
+
+    cfg = replace(cfg, seed=seed)
+    trace = trace or default_trace(cfg, ocfg)
+    check_trace(trace, cfg, ocfg)
+    stream = stream or default_stream(cfg, ocfg, seed)
+    params = make_params(cfg, ocfg)
+    counts = trace.counts(cfg.n_bs, cfg.n_models)
+    return run_scan(params, counts, stream, algo, dT_past=ocfg.dT_past)
+
+
+def run_online_grid(jobs, ocfg):
+    """Run many (cfg, trace, algo, seed) scenarios in ONE vmapped dispatch.
+
+    ``jobs`` is a list of dicts with keys ``cfg`` (MECConfig), ``algo``
+    (policy name), and optionally ``trace`` (a Trace; default workload
+    otherwise) and ``seed``.  All cfgs must share (n_bs, n_models) — vary
+    capacities/rates/zipf/traces/policies/seeds freely.  Returns one
+    summary dict per job, in order.
+    """
+    from dataclasses import replace
+
+    from jax.experimental import enable_x64
+
+    from repro.traces.registry import default_trace
+
+    if not jobs:
+        return []
+    shapes = {(j["cfg"].n_bs, j["cfg"].n_models) for j in jobs}
+    if len(shapes) > 1:
+        raise ValueError(f"online grid needs uniform (n_bs, n_models); "
+                         f"got {sorted(shapes)}")
+    ps, c0s, sts, pols, totals = [], [], [], [], []
+    for j in jobs:
+        seed = j.get("seed", 0)        # same default as run_online
+        cfg = replace(j["cfg"], seed=seed)
+        trace = j.get("trace") or default_trace(cfg, ocfg)
+        check_trace(trace, cfg, ocfg)
+        stream = j.get("stream") or default_stream(cfg, ocfg, seed)
+        ps.append(make_params(cfg, ocfg))
+        counts = trace.counts(cfg.n_bs, cfg.n_models)
+        c0s.append(counts)
+        sts.append(stream)
+        pols.append(_policy_id(j["algo"]))
+        totals.append(counts.sum())
+    params = OnlineParams(*(np.stack([getattr(p, f) for p in ps])
+                            for f in OnlineParams._fields))
+    st0 = init_state(ps[0], ocfg.dT_past)
+    st0 = OnlineState(*(np.broadcast_to(x, (len(jobs),) + x.shape)
+                        for x in st0))
+    counts = np.stack(c0s)
+    with enable_x64():
+        stF, qoe, hits = _compiled(True)(
+            params, st0, counts,
+            np.stack([s.adjust_ns for s in sts]),
+            np.stack([s.u_model for s in sts]),
+            np.stack([s.perms for s in sts]),
+            np.stack([s.u_shrink for s in sts]),
+            np.asarray(pols))
+    qoe, hits = np.asarray(qoe), np.asarray(hits)
+    out = []
+    for i, j in enumerate(jobs):
+        tot = max(totals[i], 1.0)
+        out.append({
+            "avg_qoe": float(qoe[i].sum()) / tot,
+            "hit_rate": float(hits[i].sum()) / tot,
+            "slot_qoe": qoe[i],
+            "slot_hits": hits[i],
+            "final_state": OnlineState(*(np.asarray(x[i]) for x in stF)),
+        })
+    return out

@@ -1,0 +1,348 @@
+"""Request-trace generators: precomputed (n_slots, n_users) workload tensors.
+
+Every generator is a pure function of a JAX PRNG key — the same key always
+yields the same trace, so every policy (and both online engines, the NumPy
+``OnlineSim`` and the ``lax.scan`` engine) replays an *identical* request
+stream.  Traces are materialized as host numpy arrays: the NumPy engine
+slices them per slot, the scan engine consumes the per-slot
+``(N, M)`` request-count tensor (``Trace.counts``) in one device array.
+
+Families (paper Sec. VI "dynamic and unpredictable online request
+patterns", plus the arrival models of the related online-caching work):
+
+  * ``stationary``   — fixed per-BS Zipf popularity (the legacy workload);
+  * ``drift``        — popularity re-drawn every ``change_every`` slots with
+                       a warm-up blend (the paper's ``pop_change_every``
+                       regime, Fig. 13);
+  * ``diurnal``      — sinusoidal load: the active-user fraction follows a
+                       day/night curve (inactive users are masked out);
+  * ``flash_crowd``  — sudden hot-model spikes: for short windows a single
+                       model absorbs most of the probability mass;
+  * ``mmpp``         — Markov-modulated bursts: a 2-state (calm/burst)
+                       chain modulates both load and popularity skew;
+  * ``mobility``     — user handover: each user's home BS performs a lazy
+                       random walk over the slots.
+
+The policy side of the replayed randomness lives here too:
+``draw_decision_stream`` pre-draws every random number the online policies
+consume (which BSs to adjust, the Random baseline's picks), so no policy
+can perturb another's stream.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+def _key(seed_or_key):
+    """Accept an int seed or a jax PRNG key."""
+    import jax
+
+    if isinstance(seed_or_key, (int, np.integer)):
+        return jax.random.PRNGKey(int(seed_or_key))
+    return seed_or_key
+
+
+# ---------------------------------------------------------------------------
+# container
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Trace:
+    """A precomputed request stream.
+
+    ``model[t, u]``/``home[t, u]`` give user u's requested model type and
+    home BS in slot t; ``mask[t, u]`` is False when the user is inactive
+    that slot (diurnal/MMPP load modulation).
+    """
+    name: str
+    model: np.ndarray            # (T, U) int32
+    home: np.ndarray             # (T, U) int32
+    mask: np.ndarray             # (T, U) bool
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def n_slots(self) -> int:
+        return self.model.shape[0]
+
+    @property
+    def n_users(self) -> int:
+        return self.model.shape[1]
+
+    def requests(self, t):
+        """Slot t's active requests: (m_u, home) 1-D arrays."""
+        sel = self.mask[t]
+        return self.model[t][sel], self.home[t][sel]
+
+    def counts(self, n_bs: int, n_models: int) -> np.ndarray:
+        """(T, N, M) per-slot request counts — the scan engine's input."""
+        T = self.n_slots
+        out = np.zeros((T, n_bs * n_models))
+        t_idx, u_idx = np.nonzero(self.mask)
+        flat = self.home[t_idx, u_idx] * n_models + self.model[t_idx, u_idx]
+        np.add.at(out, (t_idx, flat), 1.0)
+        return out.reshape(T, n_bs, n_models)
+
+
+# ---------------------------------------------------------------------------
+# shared sampling helpers (all jax.random, converted to host numpy)
+# ---------------------------------------------------------------------------
+
+def _zipf_pmf(n_models: int, a: float) -> np.ndarray:
+    p = np.ones(n_models) if a <= 0 else 1.0 / np.arange(1, n_models + 1) ** a
+    return p / p.sum()
+
+
+def _per_bs_pop(key, n_bs: int, n_models: int, a: float):
+    """(N, M): the Zipf pmf with an independent rank permutation per BS
+    (matches the legacy ``OnlineSim._draw_pop`` workload)."""
+    import jax
+
+    base = np.asarray(_zipf_pmf(n_models, a))
+    perms = jax.vmap(lambda k: jax.random.permutation(k, n_models))(
+        jax.random.split(key, n_bs))
+    return base[np.asarray(perms)]
+
+
+def _sample_requests(key, pops, n_users: int):
+    """Draw homes uniformly and models from per-(slot, BS) popularity.
+
+    ``pops`` is (T, N, M); returns (model, home) as (T, U) int32.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    T, N, M = pops.shape
+    k_home, k_model = jax.random.split(key)
+    home = jax.random.randint(k_home, (T, n_users), 0, N)
+    logits = jnp.log(jnp.take_along_axis(
+        jnp.asarray(pops), home[:, :, None] % N, axis=1) + 1e-30)
+    model = jax.random.categorical(k_model, logits, axis=-1)
+    return (np.asarray(model, dtype=np.int32),
+            np.asarray(home, dtype=np.int32))
+
+
+def _full_mask(T, U):
+    return np.ones((T, U), dtype=bool)
+
+
+# ---------------------------------------------------------------------------
+# generator families
+# ---------------------------------------------------------------------------
+
+def stationary(key, n_slots, n_users, n_bs, n_models, *, zipf=0.8):
+    """Fixed per-BS Zipf popularity — today's single hard-coded workload."""
+    import jax
+
+    key = _key(key)
+    k_pop, k_req = jax.random.split(key)
+    pop = _per_bs_pop(k_pop, n_bs, n_models, zipf)
+    pops = np.broadcast_to(pop, (n_slots, n_bs, n_models))
+    model, home = _sample_requests(k_req, np.asarray(pops), n_users)
+    return Trace("stationary", model, home, _full_mask(n_slots, n_users),
+                 {"zipf": zipf})
+
+
+def drift(key, n_slots, n_users, n_bs, n_models, *, zipf=0.8,
+          change_every=20, warmup=5):
+    """Popularity re-drawn every ``change_every`` slots; over the last
+    ``warmup`` slots of each period the stream blends toward the next
+    popularity (the legacy ``pop_change_every``/``pop_warmup`` regime)."""
+    import jax
+
+    key = _key(key)
+    ce = int(change_every)
+    if ce <= 0:
+        return stationary(key, n_slots, n_users, n_bs, n_models, zipf=zipf)
+    n_periods = n_slots // ce + 2
+    k_pop, k_req = jax.random.split(key)
+    pop_seq = np.stack([
+        _per_bs_pop(k, n_bs, n_models, zipf)
+        for k in jax.random.split(k_pop, n_periods)])    # (P, N, M)
+    pops = np.empty((n_slots, n_bs, n_models))
+    for t in range(n_slots):
+        p, k = t // ce, t % ce
+        ph = pop_seq[p]
+        if warmup and k >= ce - warmup:
+            w = (k - (ce - warmup) + 1) / warmup
+            ph = (1 - w) * ph + w * pop_seq[p + 1]
+            ph = ph / ph.sum(-1, keepdims=True)
+        pops[t] = ph
+    model, home = _sample_requests(k_req, pops, n_users)
+    return Trace("drift", model, home, _full_mask(n_slots, n_users),
+                 {"zipf": zipf, "change_every": ce, "warmup": warmup})
+
+
+def diurnal(key, n_slots, n_users, n_bs, n_models, *, zipf=0.8,
+            period=50, min_load=0.2, phase=0.0):
+    """Sinusoidal load: the active-user fraction oscillates between
+    ``min_load`` and 1 with the given period (slots)."""
+    import jax
+
+    key = _key(key)
+    k_pop, k_req, k_act = jax.random.split(key, 3)
+    pop = _per_bs_pop(k_pop, n_bs, n_models, zipf)
+    pops = np.broadcast_to(pop, (n_slots, n_bs, n_models))
+    model, home = _sample_requests(k_req, np.asarray(pops), n_users)
+    t = np.arange(n_slots)
+    frac = min_load + (1 - min_load) * 0.5 * (
+        1 + np.sin(2 * np.pi * (t + phase) / period))
+    u = np.asarray(jax.random.uniform(k_act, (n_slots, n_users)))
+    mask = u < frac[:, None]
+    return Trace("diurnal", model, home, mask,
+                 {"zipf": zipf, "period": period, "min_load": min_load})
+
+
+def flash_crowd(key, n_slots, n_users, n_bs, n_models, *, zipf=0.8,
+                n_events=2, duration=10, intensity=0.8):
+    """Sudden hot-model spikes: during each event a single model absorbs
+    ``intensity`` of the probability mass at every BS."""
+    import jax
+
+    key = _key(key)
+    k_pop, k_start, k_hot, k_req = jax.random.split(key, 4)
+    pop = _per_bs_pop(k_pop, n_bs, n_models, zipf)
+    pops = np.tile(pop[None], (n_slots, 1, 1))
+    starts = np.asarray(jax.random.randint(
+        k_start, (n_events,), 0, max(n_slots - duration, 1)))
+    hot = np.asarray(jax.random.randint(k_hot, (n_events,), 0, n_models))
+    events = []
+    for s, m in zip(starts, hot):
+        e = min(int(s) + duration, n_slots)
+        # blend from the *current* pops so overlapping events compose
+        # (both hot models stay elevated, the later one dominant) instead
+        # of the later event erasing the earlier one
+        pops[int(s):e] = (1 - intensity) * pops[int(s):e]
+        pops[int(s):e, :, int(m)] += intensity
+        events.append({"start": int(s), "end": e, "model": int(m)})
+    model, home = _sample_requests(k_req, pops, n_users)
+    return Trace("flash_crowd", model, home, _full_mask(n_slots, n_users),
+                 {"zipf": zipf, "events": events, "intensity": intensity})
+
+
+def mmpp(key, n_slots, n_users, n_bs, n_models, *, zipf=0.8,
+         p_stay_calm=0.9, p_stay_burst=0.7, calm_load=0.4, burst_load=1.0,
+         burst_sharpen=2.0):
+    """Markov-modulated arrivals: a 2-state (calm/burst) chain modulates
+    the active-user fraction and, in bursts, sharpens the popularity skew
+    (``pop**burst_sharpen`` renormalized)."""
+    import jax
+
+    key = _key(key)
+    k_pop, k_chain, k_act, k_req = jax.random.split(key, 4)
+    pop = _per_bs_pop(k_pop, n_bs, n_models, zipf)
+    sharp = pop ** burst_sharpen
+    sharp = sharp / sharp.sum(-1, keepdims=True)
+    u = np.asarray(jax.random.uniform(k_chain, (n_slots,)))
+    state = np.zeros(n_slots, dtype=np.int32)
+    s = 0
+    for t in range(n_slots):
+        stay = p_stay_calm if s == 0 else p_stay_burst
+        s = s if u[t] < stay else 1 - s
+        state[t] = s
+    pops = np.where(state[:, None, None] == 1, sharp[None], pop[None])
+    model, home = _sample_requests(k_req, pops, n_users)
+    frac = np.where(state == 1, burst_load, calm_load)
+    ua = np.asarray(jax.random.uniform(k_act, (n_slots, n_users)))
+    mask = ua < frac[:, None]
+    return Trace("mmpp", model, home, mask,
+                 {"zipf": zipf, "burst_slots": int(state.sum())})
+
+
+def mobility(key, n_slots, n_users, n_bs, n_models, *, zipf=0.8,
+             p_move=0.05):
+    """User handover: each user's home BS re-draws uniformly with
+    probability ``p_move`` per slot (a lazy random walk); popularity is
+    stationary per BS, so demand *composition* at each BS drifts with the
+    users."""
+    import jax
+
+    key = _key(key)
+    k_pop, k_h0, k_move, k_new, k_req = jax.random.split(key, 5)
+    pop = _per_bs_pop(k_pop, n_bs, n_models, zipf)
+    h0 = np.asarray(jax.random.randint(k_h0, (n_users,), 0, n_bs))
+    moves = np.asarray(jax.random.uniform(
+        k_move, (n_slots, n_users))) < p_move
+    new = np.asarray(jax.random.randint(
+        k_new, (n_slots, n_users), 0, n_bs))
+    home = np.empty((n_slots, n_users), dtype=np.int32)
+    cur = h0.astype(np.int32)
+    for t in range(n_slots):
+        cur = np.where(moves[t], new[t], cur).astype(np.int32)
+        home[t] = cur
+    # models from each user's *current* home popularity
+    import jax.numpy as jnp
+    logits = jnp.log(jnp.asarray(pop)[home] + 1e-30)      # (T, U, M)
+    model = np.asarray(jax.random.categorical(k_req, logits, axis=-1),
+                       dtype=np.int32)
+    return Trace("mobility", model, home.astype(np.int32),
+                 _full_mask(n_slots, n_users),
+                 {"zipf": zipf, "p_move": p_move,
+                  "handovers": int(moves.sum())})
+
+
+# ---------------------------------------------------------------------------
+# the policies' pre-drawn randomness
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DecisionStream:
+    """Every random number the online policies consume, drawn up front.
+
+    All four policies index the *same* stream, so no policy's consumption
+    can perturb another's (nor the request trace, which has its own key):
+
+      * ``adjust_ns[t, j]`` — the j-th BS adjusted in slot t (all policies);
+      * ``u_model[t, j]``   — Random baseline's model pick (uniform in [0,1),
+                              mapped onto the candidate list);
+      * ``perms[t, j]``     — Random baseline's eviction scan order;
+      * ``u_shrink[t, j, m]`` — Random baseline's shrink level for model m.
+    """
+    adjust_ns: np.ndarray        # (T, rounds) int
+    u_model: np.ndarray          # (T, rounds) float64
+    perms: np.ndarray            # (T, rounds, M) int
+    u_shrink: np.ndarray         # (T, rounds, M) float64
+
+
+def default_stream(cfg, ocfg, seed: int) -> DecisionStream:
+    """The run's policy randomness for (cfg, ocfg): keyed off ``seed + 99``
+    so it is independent of the trace key (``cfg.seed``).  The single
+    derivation shared by ``run_online``, ``run_online_scan`` and
+    ``run_online_grid`` — it is load-bearing for NumPy==scan replay."""
+    return draw_decision_stream(ocfg.n_slots, ocfg.rounds, cfg.n_bs,
+                                cfg.n_models, seed + 99)
+
+
+def check_trace(trace: Trace, cfg, ocfg) -> Trace:
+    """Validate a user-supplied trace against the run's shape (a silent
+    mismatch would mis-normalize avg QoE or crash deep in the engines)."""
+    if trace.n_slots != ocfg.n_slots:
+        raise ValueError(
+            f"trace {trace.name!r} has {trace.n_slots} slots but the run "
+            f"needs ocfg.n_slots={ocfg.n_slots}; generate it with "
+            f"n_slots={ocfg.n_slots}")
+    if trace.n_users != cfg.n_users:
+        raise ValueError(
+            f"trace {trace.name!r} has {trace.n_users} users but "
+            f"cfg.n_users={cfg.n_users}")
+    if trace.home.max() >= cfg.n_bs or trace.model.max() >= cfg.n_models:
+        raise ValueError(
+            f"trace {trace.name!r} indexes BS/model outside "
+            f"(n_bs={cfg.n_bs}, n_models={cfg.n_models})")
+    return trace
+
+
+def draw_decision_stream(n_slots: int, rounds: int, n_bs: int,
+                         n_models: int, seed: int) -> DecisionStream:
+    rng = np.random.default_rng(seed)
+    adjust_ns = rng.integers(0, n_bs, size=(n_slots, rounds))
+    u_model = rng.random((n_slots, rounds))
+    perms = np.stack([
+        np.stack([rng.permutation(n_models) for _ in range(rounds)])
+        for _ in range(n_slots)])
+    u_shrink = rng.random((n_slots, rounds, n_models))
+    return DecisionStream(adjust_ns=adjust_ns.astype(np.int32),
+                          u_model=u_model,
+                          perms=perms.astype(np.int32),
+                          u_shrink=u_shrink)

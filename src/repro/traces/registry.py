@@ -1,0 +1,53 @@
+"""Named trace families for sweeps.
+
+``make_trace("flash_crowd", cfg, n_slots, seed=3, intensity=0.9)`` builds a
+replayable workload for a scenario config; ``default_trace`` reproduces the
+legacy ``OnlineSim`` workload (popularity drift when
+``ocfg.pop_change_every`` is set, stationary Zipf otherwise) so the
+refactored online driver is a drop-in.
+"""
+from __future__ import annotations
+
+from repro.traces import generators as G
+from repro.traces.generators import Trace
+
+REGISTRY = {
+    "stationary": G.stationary,
+    "drift": G.drift,
+    "diurnal": G.diurnal,
+    "flash_crowd": G.flash_crowd,
+    "mmpp": G.mmpp,
+    "mobility": G.mobility,
+}
+
+
+def available():
+    return sorted(REGISTRY)
+
+
+def make_trace(name: str, cfg, n_slots: int, seed: int = 0, **kw) -> Trace:
+    """Build trace ``name`` for a :class:`~repro.mec.scenario.MECConfig`.
+
+    ``cfg`` only needs ``n_users``/``n_bs``/``n_models``/``zipf``
+    attributes; extra ``kw`` are family parameters (see
+    ``repro.traces.generators``).
+    """
+    try:
+        gen = REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown trace family {name!r}; available: {available()}")
+    kw.setdefault("zipf", cfg.zipf)
+    return gen(seed, n_slots, cfg.n_users, cfg.n_bs, cfg.n_models, **kw)
+
+
+def default_trace(cfg, ocfg, seed: int | None = None) -> Trace:
+    """The legacy online workload: drift when the config asks for
+    popularity changes, stationary Zipf otherwise.  Seeded from
+    ``cfg.seed`` so every policy sharing a config replays one stream."""
+    seed = cfg.seed if seed is None else seed
+    if getattr(ocfg, "pop_change_every", 0):
+        return make_trace("drift", cfg, ocfg.n_slots, seed=seed,
+                          change_every=ocfg.pop_change_every,
+                          warmup=ocfg.pop_warmup)
+    return make_trace("stationary", cfg, ocfg.n_slots, seed=seed)
