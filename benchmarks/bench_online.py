@@ -117,8 +117,13 @@ def main():
 
 
 def smoke():
-    """CI smoke: tiny equivalence + one tiny grid dispatch."""
+    """CI smoke: tiny equivalence + one tiny grid dispatch.
+
+    Persists the equivalence block (no throughput at this scale) to the
+    ``ci/`` scratch subdir — never over the committed baseline — so
+    ``scripts/check_bench.py`` can gate the correctness gaps in CI."""
     eq = bench_equivalence(n_users=40, n_slots=12)
+    common.save("BENCH_online", {"equivalence": eq}, subdir="ci")
     assert all(r["final_state_equal"] for r in eq.values()), eq
     assert all(r["max_slot_qoe_relgap"] < 1e-9 for r in eq.values()), eq
     ocfg = OnlineConfig(n_slots=12)

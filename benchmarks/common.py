@@ -31,9 +31,12 @@ def paper_online_cfg(**kw):
     return OnlineConfig(**base)
 
 
-def save(name: str, payload):
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    path = RESULTS / f"{name}.json"
+def save(name: str, payload, subdir: str = None):
+    """Persist a result payload; ``subdir`` keeps scratch outputs (e.g.
+    the CI smoke runs) out of the committed baseline files."""
+    root = RESULTS / subdir if subdir else RESULTS
+    root.mkdir(parents=True, exist_ok=True)
+    path = root / f"{name}.json"
     path.write_text(json.dumps(payload, indent=1, default=float))
     return path
 

@@ -5,7 +5,6 @@
 from __future__ import annotations
 
 import json
-import pathlib
 
 import matplotlib
 matplotlib.use("Agg")

@@ -8,8 +8,9 @@ from __future__ import annotations
 
 import time
 
-from benchmarks import bench_kernels, bench_lp, bench_online, common
-from benchmarks import motivating_example, roofline, serving_slo, tables
+from benchmarks import bench_kernels, bench_lp, bench_offline, bench_online
+from benchmarks import common, motivating_example, roofline, serving_slo, \
+    tables
 
 
 def _emit_offline(name, res):
@@ -44,14 +45,15 @@ def main() -> None:
         res = fn()
         for xval, algos in res.items():
             for a, r in algos.items():
-                common.csv_row(f"{name}_{xval}_{a}", 0,
+                common.csv_row(f"{name}_{xval}_{a}",
+                               r.get("seconds", 0) * 1e6,
                                f"prec={r['avg_precision']:.3f};"
                                f"hr={r['hit_rate']:.3f}")
 
     res = tables.fig12_memory_online(caps=(100, 500, 900))
     for cap, algos in res.items():
         for a, r in algos.items():
-            common.csv_row(f"fig12_{cap}_{a}", 0,
+            common.csv_row(f"fig12_{cap}_{a}", r.get("seconds", 0) * 1e6,
                            f"qoe={r['avg_qoe']:.3f};hr={r['hit_rate']:.3f}")
 
     sw = tables.sweep_table()
@@ -62,6 +64,7 @@ def main() -> None:
     serving_slo.main()
     bench_lp.main()
     bench_online.main()
+    bench_offline.main()
     bench_kernels.main()
 
     for mesh in ("16x16", "2x16x16"):

@@ -7,7 +7,6 @@ resident) and serving-infrastructure metrics (latency percentiles).
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common
 from repro import configs

@@ -2,7 +2,6 @@
 12-14).  Each returns a dict and persists JSON under results/bench/."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common
 from repro.core.cocar import run_offline
@@ -10,6 +9,14 @@ from repro.core.online import run_online
 
 OFFLINE_ALGOS = ("lr", "cocar", "gatmarl", "greedy", "spr3", "random")
 ONLINE_ALGOS = ("cocar-ol", "lfu-mad", "lfu", "random")
+
+
+def _timed(fn, *args, **kw):
+    """Run one algo and thread its wall-clock into the result row — every
+    table/figure cell carries real ``seconds`` for the benchmark CSV."""
+    res, secs = common.timed(fn, *args, **kw)
+    res["seconds"] = round(secs, 3)
+    return res
 
 
 def sweep_table(**sweep_kw):
@@ -26,9 +33,7 @@ def table4_offline(algos=OFFLINE_ALGOS, **cfg_kw):
     cfg = common.paper_offline_cfg(**cfg_kw)
     out = {}
     for a in algos:
-        res, secs = common.timed(run_offline, cfg, a)
-        res["seconds"] = round(secs, 2)
-        out[a] = res
+        out[a] = _timed(run_offline, cfg, a)
     common.save("table4_offline", out)
     return out
 
@@ -41,9 +46,7 @@ def table5_online(algos=ONLINE_ALGOS, **cfg_kw):
         key = "w_partition" if part else "wo_partition"
         out[key] = {}
         for a in algos:
-            res, secs = common.timed(run_online, cfg, ocfg, a)
-            res["seconds"] = round(secs, 2)
-            out[key][a] = res
+            out[key][a] = _timed(run_online, cfg, ocfg, a)
     common.save("table5_online", out)
     return out
 
@@ -53,7 +56,7 @@ def fig6_memory(caps=(100, 200, 300, 400, 500),
     out = {}
     for cap in caps:
         cfg = common.paper_offline_cfg(mem_capacity_mb=float(cap))
-        out[cap] = {a: run_offline(cfg, a) for a in algos}
+        out[cap] = {a: _timed(run_offline, cfg, a) for a in algos}
     common.save("fig6_memory", out)
     return out
 
@@ -65,7 +68,7 @@ def fig7_popularity(change_every=(1, 2, 5, 10),
         cfg = common.paper_offline_cfg(
             popularity_change_every=ce,
             n_windows=20 if common.FULL else 10)
-        out[ce] = {a: run_offline(cfg, a) for a in algos}
+        out[ce] = {a: _timed(run_offline, cfg, a) for a in algos}
     common.save("fig7_popularity", out)
     return out
 
@@ -75,7 +78,7 @@ def fig8_zipf(zipfs=(0.0, 0.2, 0.4, 0.6, 0.8, 1.0),
     out = {}
     for z in zipfs:
         cfg = common.paper_offline_cfg(zipf=z)
-        out[z] = {a: run_offline(cfg, a) for a in algos}
+        out[z] = {a: _timed(run_offline, cfg, a) for a in algos}
     common.save("fig8_zipf", out)
     return out
 
@@ -89,7 +92,7 @@ def fig9_window(durations=(1.0, 2.0, 3.0, 4.0, 5.0),
         cfg = common.paper_offline_cfg(
             window_s=d, n_windows=int(total_s / d),
             n_users=int(users_per_s * d))
-        out[d] = {a: run_offline(cfg, a) for a in algos}
+        out[d] = {a: _timed(run_offline, cfg, a) for a in algos}
     common.save("fig9_window", out)
     return out
 
@@ -100,7 +103,7 @@ def fig12_memory_online(caps=(100, 300, 500, 700, 900),
     for cap in caps:
         cfg = common.paper_offline_cfg(mem_capacity_mb=float(cap))
         ocfg = common.paper_online_cfg()
-        out[cap] = {a: run_online(cfg, ocfg, a) for a in algos}
+        out[cap] = {a: _timed(run_online, cfg, ocfg, a) for a in algos}
     common.save("fig12_memory_online", out)
     return out
 
@@ -111,7 +114,7 @@ def fig13_popfreq_online(change_every=(10, 20, 50, 100),
     for ce in change_every:
         cfg = common.paper_offline_cfg()
         ocfg = common.paper_online_cfg(pop_change_every=ce)
-        out[ce] = {a: run_online(cfg, ocfg, a) for a in algos}
+        out[ce] = {a: _timed(run_online, cfg, ocfg, a) for a in algos}
     common.save("fig13_popfreq_online", out)
     return out
 
@@ -122,6 +125,6 @@ def fig14_zipf_online(zipfs=(0.0, 0.4, 0.8),
     for z in zipfs:
         cfg = common.paper_offline_cfg(zipf=z)
         ocfg = common.paper_online_cfg()
-        out[z] = {a: run_online(cfg, ocfg, a) for a in algos}
+        out[z] = {a: _timed(run_online, cfg, ocfg, a) for a in algos}
     common.save("fig14_zipf_online", out)
     return out

@@ -1,0 +1,177 @@
+#!/usr/bin/env python
+"""Bench regression gate: compare freshly produced ``results/bench/
+BENCH_*.json`` against the committed baselines.
+
+Two kinds of checks, driven by the manifest below:
+
+  * **perf ratios** (speedups, higher is better): machine-portable because
+    both sides of each ratio ran on the same box; fail when a fresh ratio
+    drops below ``(1 - RATIO_TOL)`` of the baseline (>25% slowdown);
+  * **correctness gaps** (lower is better) and **flags** (must stay
+    truthy): fail on ANY growth beyond the absolute floor — an
+    equivalence gap that widens is a correctness regression, not noise.
+
+Perf ratios are only compared when the fresh run used the same scale
+knobs (scale fields below) as the baseline; a CI smoke run at a smaller
+scale skips them with a notice instead of failing spuriously.
+
+Usage:
+    python scripts/check_bench.py [--baseline DIR] [--fresh DIR]
+
+Defaults: baseline = the committed copy (via ``git show HEAD:...``),
+fresh = ``results/bench``.  Exit code 1 on any failure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+RATIO_TOL = 0.25          # fail on >25% slowdown of a perf ratio
+GAP_FLOOR = 1e-9          # correctness gaps may float below this freely
+
+#: per-file manifest: dotted paths into the JSON payload
+MANIFEST = {
+    "BENCH_online.json": {
+        "scale": ["throughput.scenarios", "throughput.n_slots",
+                  "throughput.n_users"],
+        "ratios": ["throughput.speedup"],
+        "gaps": ["throughput.max_avg_qoe_gap",
+                 "equivalence.cocar-ol.max_slot_qoe_relgap",
+                 "equivalence.lfu.max_slot_qoe_relgap",
+                 "equivalence.lfu-mad.max_slot_qoe_relgap",
+                 "equivalence.random.max_slot_qoe_relgap"],
+        "flags": ["equivalence.cocar-ol.final_state_equal",
+                  "equivalence.lfu.final_state_equal",
+                  "equivalence.lfu-mad.final_state_equal",
+                  "equivalence.random.final_state_equal"],
+    },
+    "BENCH_offline.json": {
+        "scale": ["throughput.variants", "throughput.n_seeds",
+                  "throughput.n_users", "throughput.pdhg_iters"],
+        "ratios": ["throughput.speedup_vs_host_loop",
+                   "throughput.speedup_vs_host_rr"],
+        "gaps": ["equivalence.max_obj_gap", "equivalence.max_metric_gap",
+                 "throughput.avg_precision_gap"],
+        "flags": ["equivalence.decisions_identical"],
+    },
+}
+
+
+def _get(payload, dotted):
+    cur = payload
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def _load(root, name, git_ref=None):
+    if git_ref is not None:
+        try:
+            out = subprocess.run(
+                ["git", "show", f"{git_ref}:results/bench/{name}"],
+                cwd=REPO, capture_output=True, text=True, check=True)
+        except subprocess.CalledProcessError:
+            return None
+        return json.loads(out.stdout)
+    path = pathlib.Path(root) / name
+    if not path.exists():
+        return None
+    return json.loads(path.read_text())
+
+
+def check_file(name, spec, base, fresh):
+    """Returns a list of (level, message); level in {fail, warn, ok}.
+
+    A fresh field that was not produced at this scale (e.g. a CI smoke run
+    writes only the equivalence block) is skipped with a notice — the
+    full-scale local/bench runs are where every field exists.  A file where
+    *nothing* could be compared fails: that is a schema break, not a
+    smaller scale.
+    """
+    msgs = []
+    same_scale = all(_get(base, k) == _get(fresh, k) for k in spec["scale"])
+    for key in spec["ratios"]:
+        b, f = _get(base, key), _get(fresh, key)
+        if f is None:
+            msgs.append(("warn", f"{name}:{key} not produced by this run"))
+        elif b is None:
+            msgs.append(("warn", f"{name}:{key} has no baseline yet"))
+        elif not same_scale:
+            msgs.append(("warn", f"{name}:{key} perf check skipped "
+                         "(scale mismatch vs baseline)"))
+        elif f < b * (1.0 - RATIO_TOL):
+            msgs.append(("fail", f"{name}:{key} regressed: "
+                         f"{f:.2f} < {b:.2f} - {RATIO_TOL:.0%}"))
+        else:
+            msgs.append(("ok", f"{name}:{key} {f:.2f} (baseline {b:.2f})"))
+    for key in spec["gaps"]:
+        b, f = _get(base, key), _get(fresh, key)
+        if f is None:
+            msgs.append(("warn", f"{name}:{key} not produced by this run"))
+        elif b is None:
+            msgs.append(("warn", f"{name}:{key} has no baseline yet"))
+        elif f > max(b, GAP_FLOOR):
+            msgs.append(("fail", f"{name}:{key} correctness gap grew: "
+                         f"{f:.3e} > {max(b, GAP_FLOOR):.3e}"))
+        else:
+            msgs.append(("ok", f"{name}:{key} {f:.2e} "
+                         f"(baseline {b:.2e})"))
+    for key in spec["flags"]:
+        f = _get(fresh, key)
+        if f is None:
+            msgs.append(("warn", f"{name}:{key} not produced by this run"))
+        elif not f:
+            msgs.append(("fail", f"{name}:{key} is {f!r}, must be true"))
+        else:
+            msgs.append(("ok", f"{name}:{key} true"))
+    if not any(level == "ok" for level, _ in msgs):
+        msgs.append(("fail", f"{name}: nothing comparable was produced "
+                     "(schema break?)"))
+    return msgs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default=None,
+                    help="directory with baseline BENCH_*.json "
+                         "(default: committed copy at --git-ref)")
+    ap.add_argument("--fresh", default=str(REPO / "results" / "bench"),
+                    help="directory with freshly produced BENCH_*.json")
+    ap.add_argument("--git-ref", default="HEAD",
+                    help="ref for the committed baseline (default HEAD)")
+    args = ap.parse_args(argv)
+
+    failures = 0
+    checked = 0
+    for name, spec in MANIFEST.items():
+        base = _load(args.baseline, name,
+                     git_ref=None if args.baseline else args.git_ref)
+        fresh = _load(args.fresh, name)
+        if base is None:
+            print(f"[skip] {name}: no committed baseline")
+            continue
+        if fresh is None:
+            print(f"[FAIL] {name}: baseline exists but no fresh result "
+                  f"under {args.fresh}")
+            failures += 1
+            continue
+        checked += 1
+        for level, msg in check_file(name, spec, base, fresh):
+            tag = {"fail": "[FAIL]", "warn": "[skip]", "ok": "[ ok ]"}[level]
+            print(f"{tag} {msg}")
+            failures += level == "fail"
+    if checked == 0:
+        print("[FAIL] no bench files checked — baselines missing?")
+        failures += 1
+    print(f"check_bench: {failures} failure(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

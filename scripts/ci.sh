@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# CI / newcomer entry point: install deps, run the tier-1 suite.
+# CI / newcomer entry point: install deps, lint, run the tier-1 suite,
+# then the engine-equivalence bench smokes + the bench regression gate.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -7,7 +8,25 @@ if [ "${CI_SKIP_INSTALL:-0}" != "1" ]; then
     python -m pip install -r requirements.txt
 fi
 
+# lint (rules live in pyproject.toml); skipped quietly where ruff is not
+# installed — the CI workflow always installs and runs it
+if command -v ruff >/dev/null 2>&1; then
+    ruff check .
+else
+    echo "ci.sh: ruff not installed, skipping lint"
+fi
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 
-# quick online smoke: NumPy OnlineSim == scan engine on every policy
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_online --smoke
+# bench smokes: NumPy OnlineSim == scan engine on every policy, and the
+# NumPy round+repair == fused offline pipeline on a small grid.  Fresh
+# results land in the results/bench/ci/ scratch dir — never over the
+# committed baselines — and check_bench compares the two (correctness
+# gaps always; perf ratios only for same-scale runs).  JAX_ENABLE_X64 is
+# scoped to these steps: the equivalence engines want f64 defaults, while
+# the Pallas kernel tests above pin float32.
+JAX_ENABLE_X64=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.bench_online --smoke
+JAX_ENABLE_X64=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.bench_offline --smoke
+python scripts/check_bench.py --fresh results/bench/ci

@@ -1,5 +1,4 @@
 """Ad-hoc: forward every smoke config (train + prefill + decode)."""
-import sys
 
 import jax
 import jax.numpy as jnp

@@ -1,34 +1,52 @@
 """CoCaR — the offline algorithm (paper Alg. 1 + Sec. V-D) and the
 window-by-window offline driver.
 
-``cocar_window`` handles one window; ``cocar_windows_batched`` solves many
-independent windows (scenario-grid variants, seeds, parallel traces)
-through ONE vmapped PDHG dispatch — the entry point the sweep harness
-(``repro.experiments.sweep``) builds on.
+``cocar_window`` handles one window on the host.  For grids, the whole
+offline pipeline — LP (PDHG) → randomized rounding → repair → trial
+argmax → window metrics — is a single jitted/vmapped device dispatch over
+(windows × rounding seeds × best_of trials): ``offline_pipeline_device``,
+driven by ``cocar_windows_batched(backend="device")`` and the sweep
+harness (``repro.experiments.sweep``).
+
+``offline_pipeline_host`` is the NumPy reference of the same computation
+(per-window Python loops over seeds and trials).  Both consume the same
+pre-drawn rounding uniforms and make decision-identical choices — the
+offline counterpart of the PR-2 online-engine equivalence
+(``docs/algorithms.md`` Sec. 7; asserted in
+``tests/test_offline_batched.py`` / ``benchmarks/bench_offline.py``).
 """
 from __future__ import annotations
+
+import functools
 
 import numpy as np
 
 from repro.core import lp as LP
-from repro.core.jdcr import JDCRInstance
-from repro.core.rounding import repair, round_solution_batch
+from repro.core.jdcr import JDCRInstance, objective_sel
+from repro.core.rounding import (draw_rounding_uniforms, repair,
+                                 repair_device, round_from_uniforms)
 from repro.mec import metrics as MET
-from repro.mec.scenario import MECConfig, Scenario, stack_instances
+from repro.mec.scenario import MECConfig, Scenario, StackedWindows, \
+    stack_instances
 
 
 def _round_and_repair(inst: JDCRInstance, x_f, A_f, seed: int, best_of: int):
-    """All ``best_of`` Alg. 1 draws in one batched RNG op, then repair each
-    and keep the feasible solution with the highest objective — every draw
-    satisfies Thm 1's guarantee, so the max only tightens it (and cuts the
-    repair losses from unlucky memory-overflow draws; draws are
+    """All ``best_of`` Alg. 1 draws from one batched RNG op, then repair
+    each and keep the feasible solution with the highest objective — every
+    draw satisfies Thm 1's guarantee, so the max only tightens it (and cuts
+    the repair losses from unlucky memory-overflow draws; draws are
     microseconds next to the LP solve)."""
-    xs, As = round_solution_batch(inst, x_f, A_f, seed,
-                                  n_trials=max(best_of, 1))
+    T = max(best_of, 1)
+    u_cat, u_phi = draw_rounding_uniforms(seed, T, inst.N, inst.M, inst.U,
+                                          inst.H)
+    x_r, A_r = round_from_uniforms(np.asarray(x_f, np.float64),
+                                   np.asarray(A_f, np.float64),
+                                   inst.onehot_mu(), u_cat, u_phi)
+    prec_u = inst.prec[inst.m_u, 1:]
     best = None
-    for x_i, A_i in zip(xs, As):
+    for x_i, A_i in zip(x_r, A_r):
         x, A = repair(inst, x_i, A_i)
-        val = inst.objective(A)
+        val = objective_sel(prec_u, A)
         if best is None or val > best[0]:
             best = (val, x, A)
     _, x, A = best
@@ -47,24 +65,171 @@ def cocar_window(inst: JDCRInstance, seed: int = 0, solver: str = "scipy",
     return x, A, {"lp_obj": obj}
 
 
-def cocar_windows_batched(insts, seed: int = 0, pdhg_iters: int = 4000,
-                          best_of: int = 8):
-    """CoCaR over a stack of independent windows, LP-solved in ONE vmapped
-    PDHG dispatch (rounding + repair stay per-window: repair is a
-    host-side heuristic).
+# ---------------------------------------------------------------------------
+# the fused offline pipeline (one dispatch over windows × seeds × trials)
+# ---------------------------------------------------------------------------
 
-    Instances may differ in N and U (padded inside ``stack_instances``)
-    but must share the catalog shape (M, H).  Returns a list of
-    (x, A, info) triples aligned with ``insts``.
+def _pipeline_kernel(data, u_cat, u_phi, iters, n_seeds):
+    """One padded window through LP → round → repair → argmax → metrics,
+    entirely in jnp.  ``u_cat (S·T, N, M)`` / ``u_phi (S·T, N, U, H)``
+    carry ``n_seeds`` independent rounding seeds of ``best_of`` trials
+    each; the best trial *per seed* is selected on device."""
+    import jax
+    import jax.numpy as jnp
+
+    x_f, A_f = LP._pdhg_kernel(data, iters)
+    x_r, A_r = round_from_uniforms(x_f, A_f, data.onehot_mu, u_cat, u_phi)
+    x_p, A_p = jax.vmap(repair_device, in_axes=(None, 0, 0))(data, x_r, A_r)
+    objs = jax.vmap(lambda a: objective_sel(data.prec_u, a))(A_p)
+    T = objs.shape[0] // n_seeds
+    objs = objs.reshape(n_seeds, T)
+    best_t = jnp.argmax(objs, axis=1)                       # (S,)
+    idx = jnp.arange(n_seeds) * T + best_t
+    x_b, A_b = x_p[idx], A_p[idx]                           # (S, ...)
+    met = jax.vmap(lambda xx, aa: MET.window_metrics_device(data, xx, aa))(
+        x_b, A_b)
+    lp_obj = jnp.einsum("nuh,uh->", A_f, data.prec_u)
+    return {"x_frac": x_f, "A_frac": A_f, "x": x_b, "A": A_b,
+            "trial_objs": objs, "best_t": best_t, "metrics": met,
+            "lp_obj": lp_obj}
+
+
+@functools.cache
+def _pipeline_jitted():
+    import jax
+    fn = jax.vmap(_pipeline_kernel, in_axes=(0, 0, 0, None, None))
+    return jax.jit(fn, static_argnums=(3, 4))
+
+
+def offline_uniforms(stacked: StackedWindows, seed: int, n_seeds: int,
+                     best_of: int):
+    """The rounding randomness both pipeline engines share: one batched
+    draw at the padded stack shape, ``(B, S·T, ...)``."""
+    B = len(stacked)
+    N, U, H = stacked.data.T.shape[1:]
+    M = stacked.data.sizes.shape[1]
+    return draw_rounding_uniforms(seed, n_seeds * max(best_of, 1),
+                                  N, M, U, H, batch=B)
+
+
+def offline_pipeline_device(stacked: StackedWindows, u_cat, u_phi,
+                            pdhg_iters: int = 4000, n_seeds: int = 1):
+    """The whole offline grid in ONE jitted/vmapped f64 dispatch.
+
+    Returns a dict of padded numpy arrays: fractional solutions
+    ``x_frac (B,N,M,H+1)`` / ``A_frac``, best-per-seed integral solutions
+    ``x (B,S,...)`` / ``A``, per-trial objectives ``trial_objs (B,S,T)``,
+    the winning trial indices ``best_t (B,S)``, window ``metrics`` (dict of
+    (B,S) arrays), and ``lp_obj (B,)``.
+    """
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        out = _pipeline_jitted()(stacked.data, u_cat, u_phi,
+                                 int(pdhg_iters), int(n_seeds))
+    return {k: ({kk: np.asarray(vv) for kk, vv in v.items()}
+                if isinstance(v, dict) else np.asarray(v))
+            for k, v in out.items()}
+
+
+def offline_pipeline_host(stacked: StackedWindows, x_frac, A_frac,
+                          u_cat, u_phi, n_seeds: int = 1):
+    """NumPy reference of ``offline_pipeline_device``'s round → repair →
+    argmax → metrics stages: per-(window, seed, trial) Python loops over
+    the *same* fractional solution and uniforms.  This is both the
+    correctness oracle and the host-loop path the offline benchmark
+    measures against.
+
+    Returns ``results[b][s] = (x, A, info)`` at true (unpadded) shapes,
+    with ``info = {lp_obj, obj, best_t, trial_objs, metrics}``.
+    """
+    T = u_cat.shape[1] // n_seeds
+    results = []
+    for i, (inst, (xf, Af)) in enumerate(
+            zip(stacked.insts, stacked.unstack(x_frac, A_frac))):
+        onehot_mu = inst.onehot_mu()
+        prec_u = inst.prec[inst.m_u, 1:]
+        xf = np.asarray(xf, np.float64)
+        Af = np.asarray(Af, np.float64)
+        lp_obj = float(inst.objective(Af))
+        per_seed = []
+        for s in range(n_seeds):
+            sl = slice(s * T, (s + 1) * T)
+            uc = u_cat[i, sl, :inst.N]
+            up = u_phi[i, sl, :inst.N, :inst.U]
+            x_r, A_r = round_from_uniforms(xf, Af, onehot_mu, uc, up)
+            best = None
+            vals = []
+            for t in range(T):
+                x_t, A_t = repair(inst, x_r[t], A_r[t])
+                val = objective_sel(prec_u, A_t)
+                vals.append(float(val))
+                if best is None or val > best[0]:
+                    best = (val, t, x_t, A_t)
+            _, t_b, x_b, A_b = best
+            info = {"lp_obj": lp_obj, "obj": float(best[0]), "best_t": t_b,
+                    "trial_objs": np.asarray(vals),
+                    "metrics": MET.window_metrics(inst, x_b, A_b)}
+            per_seed.append((x_b, A_b, info))
+        results.append(per_seed)
+    return results
+
+
+def _unstack_device(stacked: StackedWindows, out, n_seeds: int):
+    """Slice the padded device pipeline outputs back into the
+    ``results[b][s] = (x, A, info)`` shape of the host reference."""
+    results = []
+    for i, inst in enumerate(stacked.insts):
+        per_seed = []
+        for s in range(n_seeds):
+            info = {"lp_obj": float(out["lp_obj"][i]),
+                    "obj": float(out["trial_objs"][i, s,
+                                                   out["best_t"][i, s]]),
+                    "best_t": int(out["best_t"][i, s]),
+                    "trial_objs": out["trial_objs"][i, s],
+                    "metrics": {k: float(v[i, s])
+                                for k, v in out["metrics"].items()}}
+            per_seed.append((out["x"][i, s, :inst.N],
+                             out["A"][i, s, :inst.N, :inst.U], info))
+        results.append(per_seed)
+    return results
+
+
+def cocar_grid(insts, seed: int = 0, pdhg_iters: int = 4000,
+               best_of: int = 8, n_seeds: int = 1, backend: str = "device"):
+    """CoCaR over a grid of independent windows × rounding seeds.
+
+    ``backend="device"``: ONE fused dispatch (LP → rounding → repair →
+    objective/metrics, trial argmax on device).  ``backend="host"``: the
+    legacy path — batched LP dispatch, then per-(window, seed, trial)
+    NumPy rounding + repair.  Returns ``results[b][s] = (x, A, info)``.
     """
     stacked = stack_instances(list(insts))
+    u_cat, u_phi = offline_uniforms(stacked, seed, n_seeds, best_of)
+    if backend == "device":
+        out = offline_pipeline_device(stacked, u_cat, u_phi,
+                                      pdhg_iters=pdhg_iters,
+                                      n_seeds=n_seeds)
+        return _unstack_device(stacked, out, n_seeds)
+    if backend != "host":
+        raise ValueError(f"unknown backend {backend!r}")
     res = LP.solve_lp_pdhg_batched(stacked.data, iters=pdhg_iters)
-    out = []
-    for i, (inst, (x_f, A_f)) in enumerate(
-            zip(stacked.insts, stacked.unstack(res.x, res.A))):
-        x, A = _round_and_repair(inst, x_f, A_f, seed * 7919 + i, best_of)
-        out.append((x, A, {"lp_obj": inst.objective(A_f)}))
-    return out
+    return offline_pipeline_host(stacked, res.x, res.A, u_cat, u_phi,
+                                 n_seeds=n_seeds)
+
+
+def cocar_windows_batched(insts, seed: int = 0, pdhg_iters: int = 4000,
+                          best_of: int = 8, backend: str = "device"):
+    """CoCaR over a stack of independent windows (scenario-grid variants,
+    seeds, parallel traces) — one rounding seed per window, aligned with
+    ``insts``.  Returns a list of (x, A, info) triples.
+
+    Instances may differ in N and U (padded inside ``stack_instances``)
+    but must share the catalog shape (M, H).
+    """
+    grid = cocar_grid(insts, seed=seed, pdhg_iters=pdhg_iters,
+                      best_of=best_of, n_seeds=1, backend=backend)
+    return [per_seed[0] for per_seed in grid]
 
 
 def lr_window(inst: JDCRInstance):

@@ -10,12 +10,63 @@ submodels H; the empty submodel h0 is slot 0 of the caching variable only):
   prec   (M, H+1)      p_h (slot 0 = 0)
   flops  (M, H+1)      c_h per data unit (slot 0 = 0)
   loadD  (M, H+1, H+1) D_m(h', h) switching latency, rows = previous state
+
+Also home of the *deterministic reductions* the NumPy reference and the
+device round+repair pipeline share (``tree_sum``, ``objective_sel``): the
+offline equivalence story (PR-2 style, see ``docs/algorithms.md`` Sec. 7)
+hinges on decision-critical sums producing bit-identical float64 values on
+both paths.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
 import numpy as np
+
+
+def tree_sum(v, axis=-1):
+    """Balanced-tree reduction over one axis — bit-identical in NumPy and
+    JAX, and invariant to trailing zero padding.
+
+    Both engines fold the same explicit sequence of pairwise adds (no
+    library reduction, whose association is backend-defined), so any two
+    arrays with equal elements reduce to the *same float*, not merely a
+    close one.  The axis is zero-padded to the next power of two and folded
+    in halves; appending zeros only ever adds exact ``+0.0`` terms, so a
+    padded batch row reduces to the same value as its unpadded original —
+    the property that makes host-vs-device threshold and argmin/argmax
+    decisions coincide.
+    """
+    xp = np if isinstance(v, np.ndarray) else _jnp()
+    v = xp.moveaxis(v, axis, -1)
+    n = v.shape[-1]
+    if n == 0:
+        return xp.zeros(v.shape[:-1], dtype=v.dtype)
+    p = 1
+    while p < n:
+        p *= 2
+    if p != n:
+        pad = [(0, 0)] * (v.ndim - 1) + [(0, p - n)]
+        v = xp.pad(v, pad)
+    while p > 1:
+        p //= 2
+        v = v[..., :p] + v[..., p:2 * p]
+    return v[..., 0]
+
+
+def _jnp():
+    import jax.numpy as jnp
+    return jnp
+
+
+def objective_sel(prec_u, A):
+    """Total routed precision Σ A·p, as a pure tree of adds over selected
+    (not multiplied) precision values — the trial-argmax key of the
+    ``best_of`` selection, computed identically on host and device so tied
+    trials resolve to the same index on both.  ``A`` must be 0/1-valued."""
+    xp = np if isinstance(A, np.ndarray) else _jnp()
+    v = xp.where(A > 0, prec_u[None], 0.0)          # (N, U, H)
+    return tree_sum(tree_sum(tree_sum(v, -1), -1), -1)
 
 
 @dataclass
@@ -56,6 +107,13 @@ class JDCRInstance:
     def U(self):
         return len(self.m_u)
 
+    def onehot_mu(self) -> np.ndarray:
+        """(U, M) one-hot of each user's requested model type — the
+        encoding the LP, rounding, and repair kernels all consume."""
+        onehot = np.zeros((self.U, self.M))
+        onehot[np.arange(self.U), self.m_u] = 1.0
+        return onehot
+
     # ------------------------------------------------------------------
     def comm_latency(self) -> np.ndarray:
         """(U, N): T^off term for routing user u to BS n (excl. inference)."""
@@ -95,3 +153,35 @@ def check_feasible(inst: JDCRInstance, x, A, atol=1e-6):
     res["load"] = np.max((A * inst.load_latency()).sum(axis=(0, 2)) - inst.s_u)
     res["ok"] = all(v <= atol for k, v in res.items() if k != "ok")
     return res
+
+
+def check_feasible_device(data, x, A):
+    """``check_feasible`` as a pure jnp function of a PDHGData-shaped
+    pytree — residuals the fused offline pipeline can assert *inside* the
+    dispatch (vmappable over windows and trials).
+
+    Padded base stations / users carry zero capacity and zero routes, so
+    their residual contributions are masked rather than penalised.
+    Returns a dict of scalar residuals (same keys as ``check_feasible``,
+    minus ``ok``).
+    """
+    jnp = _jnp()
+    sizes, prec_u, T, L, onehot_mu = (data.sizes, data.prec_u, data.T,
+                                      data.L, data.onehot_mu)
+    bs = data.bs_mask > 0                                         # (N,)
+    um = tree_sum(onehot_mu, -1) > 0                              # (U,)
+    mem = tree_sum(tree_sum(jnp.where(x > 0, sizes[None], 0.0), -1), -1)
+    xa = jnp.einsum("nmh,um->nuh", x[:, :, 1:], onehot_mu)
+    lat = tree_sum(tree_sum(jnp.where(A > 0, T, 0.0), -1), 0)     # (U,)
+    load = tree_sum(tree_sum(jnp.where(A > 0, L, 0.0), -1), 0)
+    routes = tree_sum(tree_sum(A, -1), 0)                         # (U,)
+    return {
+        "one_submodel": jnp.max(jnp.where(bs[:, None],
+                                          jnp.abs(tree_sum(x, -1) - 1.0),
+                                          0.0)),
+        "memory": jnp.max(jnp.where(bs, mem - data.R, -jnp.inf)),
+        "route": jnp.max(jnp.where(um, routes - 1.0, -jnp.inf)),
+        "A_le_x": jnp.max(A - xa),
+        "latency": jnp.max(jnp.where(um, lat - data.ddl, -jnp.inf)),
+        "load": jnp.max(jnp.where(um, load - data.s_u, -jnp.inf)),
+    }

@@ -124,6 +124,11 @@ class PDHGData(NamedTuple):
     (see ``solve_lp_pdhg_batched``).  Shapes (unbatched):
 
       sizes      (M, H+1)   submodel memory footprints r_h
+      prec       (M, H+1)   catalog precision p_h (slot 0 = 0) — unused by
+                            the LP iteration itself, but the repair kernel
+                            (``repro.core.rounding.repair_device``) rides
+                            on the same pytree and keys eviction benefits
+                            off the per-model precision
       prec_u     (U, H)     objective coefficients p_h per user
       T          (N, U, H)  end-to-end latency T̂ (paper Eq. 15)
       L          (N, U, H)  model-load latency (paper Eq. 16)
@@ -137,6 +142,7 @@ class PDHGData(NamedTuple):
                             padded rows never perturb real ones
     """
     sizes: object
+    prec: object
     prec_u: object
     T: object
     L: object
@@ -149,15 +155,13 @@ class PDHGData(NamedTuple):
 
 def pdhg_data(inst: JDCRInstance) -> PDHGData:
     """Extract the solver-facing arrays from one instance."""
-    U, M = inst.U, inst.M
-    onehot_mu = np.zeros((U, M))
-    onehot_mu[np.arange(U), inst.m_u] = 1.0
     return PDHGData(
         sizes=np.asarray(inst.sizes, dtype=np.float64),
+        prec=np.asarray(inst.prec, dtype=np.float64),
         prec_u=np.asarray(inst.prec[inst.m_u, 1:], dtype=np.float64),
         T=np.asarray(inst.e2e_latency(), dtype=np.float64),
         L=np.asarray(inst.load_latency(), dtype=np.float64),
-        onehot_mu=onehot_mu,
+        onehot_mu=inst.onehot_mu(),
         R=np.asarray(inst.R, dtype=np.float64),
         ddl=np.asarray(inst.ddl, dtype=np.float64),
         s_u=np.asarray(inst.s_u, dtype=np.float64),
@@ -174,7 +178,7 @@ def _pdhg_kernel(data: PDHGData, iters: int):
     import jax
     import jax.numpy as jnp
 
-    sizes, prec_u, T, L, onehot_mu, R, ddl, s_u, bs_mask = data
+    sizes, _, prec_u, T, L, onehot_mu, R, ddl, s_u, bs_mask = data
     N, U, H = T.shape
     M = sizes.shape[0]
 

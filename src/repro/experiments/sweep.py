@@ -1,12 +1,16 @@
-"""Scenario-grid sweeps: the batched PDHG solver (offline) and the
-vmapped scan engine (online).
+"""Scenario-grid sweeps: the fused offline pipeline and the vmapped scan
+engine (online).
 
 Offline: fans a cross-product of :class:`MECConfig` variants (topology
 size, Zipf skew, memory capacity, deadline — the axes of the paper's
-Sec. VII comparisons) into per-variant JDCR windows, solves ALL of them in
-one vmapped PDHG dispatch (``cocar_windows_batched``), and emits one flat
-results table: a list of row dicts, each carrying the swept axis values,
-the LP objective, and the post-rounding window metrics.
+Sec. VII comparisons) into per-variant JDCR windows and runs LP →
+randomized rounding → repair → metrics for ALL of them — optionally
+crossed with ``n_seeds`` independent rounding seeds — in ONE jitted/
+vmapped device dispatch (``repro.core.cocar.cocar_grid``), emitting one
+flat results table: a list of row dicts, each carrying the swept axis
+values, the LP objective, and the post-repair window metrics.
+``backend="host"`` keeps the NumPy round+repair loop (the reference
+path) behind the same interface.
 
 Online: ``run_online_sweep`` crosses config variants with *trace families*
 (``repro.traces``: flash crowds, diurnal load, MMPP bursts, mobility, …)
@@ -25,10 +29,8 @@ from __future__ import annotations
 import json
 import pathlib
 
-import numpy as np
 
-from repro.core.cocar import cocar_windows_batched
-from repro.mec import metrics as MET
+from repro.core.cocar import cocar_grid
 from repro.mec.scenario import MECConfig, Scenario, config_grid
 
 #: Default sweep: 2^4 = 16 variants over the four axes the paper varies.
@@ -44,24 +46,31 @@ DEFAULT_AXES = {
 
 
 def run_sweep(base: MECConfig = None, axes: dict = None, window: int = 0,
-              pdhg_iters: int = 4000, best_of: int = 8, seed: int = 0):
-    """Solve one CoCaR window per grid variant, all in one batched dispatch.
+              pdhg_iters: int = 4000, best_of: int = 8, seed: int = 0,
+              n_seeds: int = 1, backend: str = "device"):
+    """One CoCaR window per (grid variant × rounding seed), the whole grid
+    as ONE fused device dispatch — LP, rounding, repair, trial argmax and
+    window metrics all inside the jit (mirroring the ``--online`` grid).
 
-    Returns a list of row dicts (one per variant, in grid order).
+    Returns a list of row dicts (variant-major, seed-minor, in grid
+    order); with ``n_seeds > 1`` each row carries its ``rounding_seed``.
     """
     base = base or MECConfig(n_users=40)
     axes = axes or DEFAULT_AXES
     cfgs = config_grid(base, axes)
     scenarios = [Scenario(c) for c in cfgs]
     insts = [sc.instance(window, sc.empty_cache()) for sc in scenarios]
-    solved = cocar_windows_batched(insts, seed=seed, pdhg_iters=pdhg_iters,
-                                   best_of=best_of)
+    grid = cocar_grid(insts, seed=seed, pdhg_iters=pdhg_iters,
+                      best_of=best_of, n_seeds=n_seeds, backend=backend)
     rows = []
-    for cfg, inst, (x, A, info) in zip(cfgs, insts, solved):
-        row = {k: getattr(cfg, k) for k in axes}
-        row["lp_obj"] = info["lp_obj"]
-        row.update(MET.window_metrics(inst, x, A))
-        rows.append(row)
+    for cfg, per_seed in zip(cfgs, grid):
+        for s, (_x, _A, info) in enumerate(per_seed):
+            row = {k: getattr(cfg, k) for k in axes}
+            if n_seeds > 1:
+                row["rounding_seed"] = s
+            row["lp_obj"] = info["lp_obj"]
+            row.update(info["metrics"])
+            rows.append(row)
     return rows
 
 
@@ -121,11 +130,12 @@ def format_table(rows) -> str:
     return "\n".join(lines)
 
 
-def main(online: bool = False):
+def main(online: bool = False, backend: str = "device", n_seeds: int = 1):
     if online:
         rows, name = run_online_sweep(), "online_grid.json"
     else:
-        rows, name = run_sweep(), "grid.json"
+        rows = run_sweep(backend=backend, n_seeds=n_seeds)
+        name = "grid.json"
     print(format_table(rows))
     out = pathlib.Path("results") / "sweep"
     out.mkdir(parents=True, exist_ok=True)
@@ -136,6 +146,16 @@ def main(online: bool = False):
 
 
 if __name__ == "__main__":
-    import sys
+    import argparse
 
-    main(online="--online" in sys.argv[1:])
+    ap = argparse.ArgumentParser(description="scenario-grid sweeps")
+    ap.add_argument("--online", action="store_true",
+                    help="trace-family grid through the scan engine")
+    ap.add_argument("--host", action="store_true",
+                    help="NumPy round+repair reference loop")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="rounding seeds per variant (offline only)")
+    args = ap.parse_args()
+    main(online=args.online,
+         backend="host" if args.host else "device",
+         n_seeds=args.seeds)

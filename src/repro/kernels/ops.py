@@ -8,7 +8,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _dec
 from repro.kernels import early_exit as _ee

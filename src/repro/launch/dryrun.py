@@ -16,12 +16,10 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 import argparse          # noqa: E402
 import json              # noqa: E402
 import pathlib           # noqa: E402
-import re                # noqa: E402
 import time              # noqa: E402
 import traceback         # noqa: E402
 
 import jax               # noqa: E402
-import numpy as np       # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro import configs                                   # noqa: E402

@@ -6,7 +6,6 @@ submodel's ExtNet head learns simultaneously (Sec. III / MSDNet-style).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

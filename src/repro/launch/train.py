@@ -16,7 +16,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import numpy as np
 
 
 def main():
@@ -36,7 +35,7 @@ def main():
 
     from repro import configs
     from repro.distribution import sharding as shd
-    from repro.launch.steps import init_train_state, make_train_step
+    from repro.launch.steps import init_train_state
     from repro.training.data import markov_stream
     from repro.training.loop import TrainConfig, train
     from repro.training.optim import AdamWConfig

@@ -60,3 +60,38 @@ def aggregate(window_results):
 def qoe(prec, latency, theta, alpha=0.9):
     """Paper Eq. 40."""
     return prec * max(0.0, 1.0 - (latency - theta) * alpha)
+
+
+def window_metrics_device(data, x, A):
+    """``window_metrics`` as a pure jnp function of one padded window —
+    the last stage of the fused offline pipeline (``repro.core.cocar``).
+
+    Valid for *repaired* solutions, where ``enforce`` is an identity:
+    repair already dedupes routes, pins them to cached submodels, and
+    kicks out latency/load violators with the same thresholds — asserted
+    in ``tests/test_offline_batched.py``.  Padded base stations and users
+    are masked out of every aggregate, so the numbers equal the host
+    ``window_metrics`` of the unpadded instance.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.jdcr import objective_sel, tree_sum
+
+    user_mask = tree_sum(data.onehot_mu, -1) > 0
+    bs_mask = data.bs_mask > 0
+    users = tree_sum(user_mask.astype(jnp.float64), -1)
+    served = (A > 0).any(axis=(0, 2)) & user_mask
+    precision = objective_sel(data.prec_u, A)
+    used = tree_sum(tree_sum(jnp.where(x > 0, data.sizes[None], 0.0),
+                             -1), -1)                       # (N,)
+    util = jnp.where(bs_mask, used / jnp.maximum(data.R, 1e-12), 0.0)
+    n_bs = tree_sum(bs_mask.astype(jnp.float64), -1)
+    return {
+        "precision_sum": precision,
+        "hits": tree_sum(served.astype(jnp.float64), -1),
+        "users": users,
+        "avg_precision": precision / jnp.maximum(users, 1.0),
+        "hit_rate": tree_sum(served.astype(jnp.float64), -1)
+        / jnp.maximum(users, 1.0),
+        "mem_util": tree_sum(util, -1) / jnp.maximum(n_bs, 1.0),
+    }

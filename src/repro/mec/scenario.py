@@ -210,6 +210,7 @@ def stack_instances(insts: list) -> StackedWindows:
         d = pdhg_data(inst)
         dn, du = N_max - inst.N, U_max - inst.U
         fields["sizes"].append(d.sizes)
+        fields["prec"].append(d.prec)
         fields["prec_u"].append(np.pad(d.prec_u, ((0, du), (0, 0))))
         fields["T"].append(np.pad(d.T, ((0, dn), (0, du), (0, 0))))
         fields["L"].append(np.pad(d.L, ((0, dn), (0, du), (0, 0))))

@@ -15,7 +15,6 @@ absolute position of query row 0.
 """
 from __future__ import annotations
 
-import functools
 from functools import partial
 
 import jax

@@ -15,7 +15,7 @@ import numpy as np
 from repro.distribution.sharding import hint, hint_btd
 from repro.models import transformer as T
 from repro.models.config import ModelConfig, Plan, build_plan
-from repro.models.layers import (cdtype, embed_frontend, embed_init,
+from repro.models.layers import (embed_frontend, embed_init,
                                  embed_tokens, exit_head_fwd, exit_head_init,
                                  rms_norm)
 

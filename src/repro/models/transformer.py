@@ -8,7 +8,6 @@ what makes the paper's Δ-submodel loading a contiguous prefix slice.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -9,13 +9,12 @@ bytes / bandwidth — the same quantity the CoCaR-OL state machine tracks.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 
 from repro.models import model as M
 from repro.models import partition
-from repro.models.config import ModelConfig, build_plan
 
 
 class WeightStore:

@@ -9,7 +9,6 @@ decisions at arbitrary load, without running tokens for every request.
 """
 from __future__ import annotations
 
-import heapq
 from dataclasses import dataclass, field
 
 import numpy as np

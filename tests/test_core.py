@@ -10,7 +10,7 @@ except ImportError:  # pragma: no cover - single-example fallback
 
 from repro.core import lp as LP
 from repro.core.cocar import cocar_window
-from repro.core.jdcr import JDCRInstance, check_feasible
+from repro.core.jdcr import check_feasible
 from repro.core.rounding import repair, round_solution
 from repro.mec.scenario import MECConfig, Scenario
 

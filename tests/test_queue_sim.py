@@ -1,6 +1,4 @@
 """Queueing simulator: SLO attainment vs load, caching quality effects."""
-import numpy as np
-import pytest
 
 from repro import configs
 from repro.serving.simulator import QueueSim, SimRequest, poisson_arrivals

@@ -1,6 +1,5 @@
 """Serving runtime (loader, engine, failures, stragglers) and training
 substrate (checkpoint atomicity, preemption resume, learning)."""
-import os
 import tempfile
 
 import jax

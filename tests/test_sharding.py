@@ -63,7 +63,6 @@ def test_padded_heads_outputs_identical():
     k = jax.random.key(0)
     p1 = M.init(cfg1, k)
     # build the unpadded params by slicing the padded ones
-    import copy
     p0 = jax.tree.map(lambda x: x, p1)
     H, Hp, E = cfg0.n_heads, cfg1.n_heads_padded, cfg0.head_dim
     K = cfg0.n_kv_heads

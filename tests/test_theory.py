@@ -1,5 +1,4 @@
 """Executable checks of the paper's Theorems 1–5 against rounding draws."""
-import numpy as np
 import pytest
 
 from repro.core import lp as LP
