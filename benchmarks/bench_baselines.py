@@ -1,0 +1,259 @@
+"""Baseline-suite benchmark: the fused one-dispatch policy grid (CoCaR +
+SPR³/Greedy/Random/GatMARL) vs the per-instance host loop.
+
+Three measurements, persisted as ``results/bench/BENCH_baselines.json``:
+
+  * **equivalence** — on the default 16-variant offline grid, every
+    policy's device kernel must reproduce the NumPy reference *decisions*
+    exactly when both consume the same fractional LP solutions, pre-drawn
+    uniforms, and trained GatMARL params: identical cache/routing arrays,
+    objectives (post-enforcement precision sums) and window metrics within
+    1e-9;
+  * **throughput** — a (16 variants × seeds × 5 policies) grid through
+    (a) the pre-refactor per-instance host loop (scipy-LP SPR³, per-user
+    Python routing loops, per-window CoCaR) and (b) ONE fused
+    jitted/vmapped device dispatch.  GatMARL training is host-side and
+    shared by both paths, so it is timed separately;
+  * **comparison** — the paper's Sec. VII-B headline: the CoCaR-vs-best-
+    baseline improvement ratio of grid-mean served precision, computed
+    from the one-dispatch grid (and drift-gated by
+    ``scripts/check_bench.py``).
+
+Speedup ratios (not absolute times) are what the CI gate holds on — they
+are stable across machines.
+
+Run standalone:  PYTHONPATH=src python -m benchmarks.bench_baselines
+Quick CI smoke:  PYTHONPATH=src python -m benchmarks.bench_baselines --smoke
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import baselines as BL
+from repro.core import cocar as CC
+from repro.experiments.sweep import DEFAULT_AXES
+from repro.mec import metrics as MET
+from repro.mec.scenario import (MECConfig, Scenario, config_grid,
+                                stack_instances)
+
+
+def _grid_stack(n_users):
+    cfgs = config_grid(MECConfig(n_users=n_users), DEFAULT_AXES)
+    insts = []
+    for c in cfgs:
+        sc = Scenario(c)
+        insts.append(sc.instance(0, sc.empty_cache()))
+    return stack_instances(insts)
+
+
+def _run_both(stacked, n_seeds, best_of, iters, episodes, seed=0):
+    uniforms = CC.policy_uniforms(stacked, seed, n_seeds, best_of)
+    gat = CC.gat_grid_policies(stacked, seed, episodes)
+    dev = CC.policy_grid_device(stacked, seed=seed, pdhg_iters=iters,
+                                best_of=best_of, n_seeds=n_seeds,
+                                uniforms=uniforms, gat=gat)
+    host = CC.policy_grid_host(stacked, uniforms, gat,
+                               dev["cocar_frac"]["x"],
+                               dev["cocar_frac"]["A"],
+                               dev["spr3_frac"], n_seeds=n_seeds)
+    return dev, host
+
+
+def _compare(stacked, dev, host, n_seeds):
+    """Per-policy decision identity + objective/metric gaps."""
+    per_policy = {}
+    for p in CC.OFFLINE_POLICIES:
+        identical = True
+        obj_gap = 0.0
+        met_gap = 0.0
+        for i, inst in enumerate(stacked.insts):
+            for s in range(n_seeds):
+                xd = dev[p]["x"][i, s, :inst.N]
+                Ad = dev[p]["A"][i, s, :inst.N, :inst.U]
+                xh, Ah, mh = host[p][i][s]
+                identical &= bool(np.array_equal(xd, xh))
+                identical &= bool(np.array_equal(Ad, Ah))
+                obj_gap = max(obj_gap, abs(
+                    float(dev[p]["metrics"]["precision_sum"][i, s])
+                    - mh["precision_sum"]))
+                met_gap = max(met_gap, max(
+                    abs(float(dev[p]["metrics"][k][i, s]) - mh[k])
+                    for k in mh))
+        per_policy[p] = {"decisions_identical": identical,
+                        "obj_gap": obj_gap, "metric_gap": met_gap}
+    return per_policy
+
+
+def bench_equivalence(n_users=40, n_seeds=2, best_of=4, iters=800,
+                      episodes=30):
+    """Default 16-variant grid: every policy's device kernel vs its NumPy
+    oracle on the same fractional solutions, uniforms, and params.
+
+    This config is deliberately independent of ``REPRO_BENCH_FULL``: the
+    CI smoke, the local full bench, and the nightly full-scale job all
+    run it at the *same* scale, so the improvement-ratio drift gate
+    derived from this grid engages on every one of them.
+    """
+    stacked = _grid_stack(n_users)
+    dev, host = _run_both(stacked, n_seeds, best_of, iters, episodes)
+    per_policy = _compare(stacked, dev, host, n_seeds)
+    out = {"variants": len(stacked), "n_seeds": n_seeds, "n_users": n_users,
+           "best_of": best_of, "pdhg_iters": iters, "episodes": episodes,
+           "decisions_identical": all(v["decisions_identical"]
+                                      for v in per_policy.values()),
+           "max_obj_gap": max(v["obj_gap"] for v in per_policy.values()),
+           "max_metric_gap": max(v["metric_gap"]
+                                 for v in per_policy.values()),
+           "per_policy": per_policy}
+    common.csv_row("baselines_equiv", 0,
+                   f"identical={out['decisions_identical']};"
+                   f"obj_gap={out['max_obj_gap']:.2e};"
+                   f"metric_gap={out['max_metric_gap']:.2e}")
+    return out, dev
+
+
+def _comparison(eq, dev):
+    """The Sec. VII-B headline block, computed from the equivalence grid
+    (fixed scale — see ``bench_equivalence``) and stamped with that scale
+    so ``check_bench.py`` can drift-gate the ratio on every CI run."""
+    comp = CC.improvement_ratio(
+        {p: dev[p]["metrics"]["avg_precision"]
+         for p in CC.OFFLINE_POLICIES})
+    out = {k: eq[k] for k in ("variants", "n_seeds", "n_users", "best_of",
+                              "pdhg_iters", "episodes")}
+    out.update(improvement_ratio=comp["ratio"],
+               best_baseline=comp["best_baseline"], means=comp["means"],
+               avg_qoe={p: float(np.mean(dev[p]["metrics"]["avg_qoe"]))
+                        for p in CC.OFFLINE_POLICIES})
+    return out
+
+
+def _host_policy_loop(insts, n_seeds, best_of, iters, gat_params):
+    """The pre-refactor path: every (window, seed) runs each policy as a
+    per-instance host call — per-user Python routing loops, a scipy LP
+    per SPR³ solve, NumPy round/repair for CoCaR — then host metrics."""
+    from repro.core.cocar import cocar_window
+
+    rows = {p: [] for p in CC.OFFLINE_POLICIES}
+    for i, inst in enumerate(insts):
+        params_i = {k: v[i] for k, v in gat_params.items()}
+        for s in range(n_seeds):
+            x, A, _ = cocar_window(inst, seed=s, solver="pdhg",
+                                   pdhg_iters=iters, best_of=best_of)
+            rows["cocar"].append(MET.window_metrics(inst, x, A))
+            x, A = BL.spr3(inst, seed=s)
+            rows["spr3"].append(MET.window_metrics(inst, x, A))
+            x, A = BL.greedy(inst)
+            rows["greedy"].append(MET.window_metrics(inst, x, A))
+            x, A = BL.random_policy(inst, seed=s)
+            rows["random"].append(MET.window_metrics(inst, x, A))
+            x, A = BL.gat_rollout_host(inst, params_i)
+            rows["gatmarl"].append(MET.window_metrics(inst, x, A))
+    return rows
+
+
+def bench_throughput(n_users=None, n_seeds=None, best_of=8, iters=1500,
+                     episodes=None):
+    """(16 variants × seeds × 5 policies): one fused dispatch vs the
+    per-instance host loop.  GatMARL training (host, shared) is timed
+    separately."""
+    n_users = n_users or (300 if common.FULL else 150)
+    n_seeds = n_seeds or (16 if common.FULL else 8)
+    episodes = episodes or (80 if common.FULL else 40)
+    stacked = _grid_stack(n_users)
+    B = len(stacked)
+    uniforms = CC.policy_uniforms(stacked, 0, n_seeds, best_of)
+
+    t0 = time.time()
+    gat = CC.gat_grid_policies(stacked, 0, episodes)
+    t_train = time.time() - t0
+
+    t0 = time.time()
+    CC.policy_grid_device(stacked, pdhg_iters=iters, best_of=best_of,
+                          n_seeds=n_seeds, uniforms=uniforms, gat=gat)
+    t_first = time.time() - t0
+    t0 = time.time()
+    dev = CC.policy_grid_device(stacked, pdhg_iters=iters, best_of=best_of,
+                                n_seeds=n_seeds, uniforms=uniforms, gat=gat)
+    t_dev = time.time() - t0
+
+    t0 = time.time()
+    host_rows = _host_policy_loop(stacked.insts, n_seeds, best_of, iters,
+                                  gat[0])
+    t_host = time.time() - t0
+
+    ratio_dev = CC.improvement_ratio(
+        {p: dev[p]["metrics"]["avg_precision"]
+         for p in CC.OFFLINE_POLICIES})
+    host_means = {p: float(np.mean([r["avg_precision"]
+                                    for r in host_rows[p]]))
+                  for p in CC.OFFLINE_POLICIES}
+    evals = B * n_seeds * len(CC.OFFLINE_POLICIES)
+    out = {
+        "variants": B, "n_seeds": n_seeds, "best_of": best_of,
+        "pdhg_iters": iters, "n_users": n_users, "episodes": episodes,
+        "device_s": t_dev, "device_first_call_s": t_first,
+        "host_loop_s": t_host, "gat_train_s": t_train,
+        "policy_windows_per_s_device": evals / t_dev,
+        "policy_windows_per_s_host": evals / t_host,
+        "speedup_vs_host_loop": t_host / t_dev,
+        "avg_precision_host_loop": host_means,
+    }
+    common.csv_row(
+        f"policy_grid_B{B}x{n_seeds}x{len(CC.OFFLINE_POLICIES)}",
+        t_dev / evals * 1e6,
+        f"speedup={out['speedup_vs_host_loop']:.1f}x;"
+        f"ratio={ratio_dev['ratio']:.2f}x_vs_{ratio_dev['best_baseline']}")
+    return out
+
+
+def main():
+    eq, dev = bench_equivalence()
+    comparison = _comparison(eq, dev)
+    th = bench_throughput()
+    out = {"equivalence": eq, "throughput": th, "comparison": comparison}
+    assert eq["decisions_identical"], eq
+    common.save("BENCH_baselines", out)
+    print(f"policy grid ({th['variants']} variants x {th['n_seeds']} seeds "
+          f"x {len(CC.OFFLINE_POLICIES)} policies): one dispatch "
+          f"{th['device_s']:.1f}s vs host loop {th['host_loop_s']:.1f}s "
+          f"({th['speedup_vs_host_loop']:.1f}x; compile "
+          f"{th['device_first_call_s']:.1f}s, GAT training "
+          f"{th['gat_train_s']:.1f}s); CoCaR "
+          f"{comparison['improvement_ratio']:.2f}x best baseline "
+          f"({comparison['best_baseline']})")
+    return out
+
+
+def smoke():
+    """CI smoke: per-policy device==reference decisions + the headline
+    ratio, at the SAME equivalence-grid scale as the committed baseline —
+    so the drift gate on ``comparison.improvement_ratio`` engages on
+    every CI run, not only on full bench runs.
+
+    Persists to the ``ci/`` scratch subdir (no throughput block at smoke
+    time) — never over the committed baseline."""
+    eq, dev = bench_equivalence()
+    comparison = _comparison(eq, dev)
+    common.save("BENCH_baselines",
+                {"equivalence": eq, "comparison": comparison},
+                subdir="ci")
+    assert eq["decisions_identical"], eq
+    assert eq["max_obj_gap"] < 1e-9, eq
+    assert eq["max_metric_gap"] < 1e-9, eq
+    print("baselines smoke OK: all device policies == numpy references "
+          f"on {eq['variants']} variants "
+          f"(CoCaR {comparison['improvement_ratio']:.2f}x "
+          f"{comparison['best_baseline']})")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+    else:
+        main()

@@ -34,8 +34,7 @@ from benchmarks import common
 from repro.core import cocar as CC
 from repro.core import lp as LP
 from repro.experiments.sweep import DEFAULT_AXES
-from repro.mec.scenario import MECConfig, Scenario, config_grid, \
-    stack_instances
+from repro.mec.scenario import MECConfig, Scenario, config_grid, stack_instances
 
 
 def _grid_stack(n_users):

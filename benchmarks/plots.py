@@ -83,6 +83,38 @@ def roofline_plot(mesh="16x16"):
     return out
 
 
+def policy_comparison_plot():
+    """Sec. VII-B headline bars from the fused policy grid: grid-mean
+    served precision + QoE per policy (``BENCH_baselines.json``)."""
+    path = RESULTS / "BENCH_baselines.json"
+    if not path.exists():
+        return None
+    comp = json.loads(path.read_text()).get("comparison")
+    if not comp:
+        return None
+    order = sorted(comp["means"], key=lambda p: -comp["means"][p])
+    fig, ax = plt.subplots(figsize=(5.5, 3.4))
+    xs = range(len(order))
+    ax.bar([x - 0.2 for x in xs], [comp["means"][p] for p in order],
+           width=0.4, label="avg precision", color="#4c72b0")
+    if "avg_qoe" in comp:
+        ax.bar([x + 0.2 for x in xs], [comp["avg_qoe"][p] for p in order],
+               width=0.4, label="avg QoE", color="#dd8452")
+    ax.set_xticks(list(xs))
+    ax.set_xticklabels([STYLE.get(p, (p,))[0] for p in order], fontsize=8)
+    ax.set_ylabel("grid mean")
+    ax.set_title(f"Sec. VII-B policy comparison — CoCaR "
+                 f"{comp['improvement_ratio']:.2f}x best baseline",
+                 fontsize=10)
+    ax.grid(alpha=0.3, axis="y")
+    ax.legend(fontsize=8)
+    fig.tight_layout()
+    out = PLOTS / "policy_comparison.png"
+    fig.savefig(out, dpi=130)
+    plt.close(fig)
+    return out
+
+
 def main():
     PLOTS.mkdir(parents=True, exist_ok=True)
     made = [
@@ -103,6 +135,7 @@ def main():
         _sweep_plot("fig14_zipf_online", "avg_qoe", "Zipf skewness",
                     "avg QoE", "Fig 14a — Zipf skew (online)",
                     "fig14_qoe.png"),
+        policy_comparison_plot(),
         roofline_plot("16x16"),
         roofline_plot("2x16x16"),
     ]

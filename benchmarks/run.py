@@ -8,9 +8,9 @@ from __future__ import annotations
 
 import time
 
-from benchmarks import bench_kernels, bench_lp, bench_offline, bench_online
-from benchmarks import common, motivating_example, roofline, serving_slo, \
-    tables
+from benchmarks import (bench_baselines, bench_kernels, bench_lp,
+                        bench_offline, bench_online, common,
+                        motivating_example, roofline, serving_slo, tables)
 
 
 def _emit_offline(name, res):
@@ -65,6 +65,7 @@ def main() -> None:
     bench_lp.main()
     bench_online.main()
     bench_offline.main()
+    bench_baselines.main()
     bench_kernels.main()
 
     for mesh in ("16x16", "2x16x16"):

@@ -2,14 +2,19 @@
 """Bench regression gate: compare freshly produced ``results/bench/
 BENCH_*.json`` against the committed baselines.
 
-Two kinds of checks, driven by the manifest below:
+Three kinds of checks, driven by the manifest below:
 
   * **perf ratios** (speedups, higher is better): machine-portable because
     both sides of each ratio ran on the same box; fail when a fresh ratio
     drops below ``(1 - RATIO_TOL)`` of the baseline (>25% slowdown);
   * **correctness gaps** (lower is better) and **flags** (must stay
     truthy): fail on ANY growth beyond the absolute floor — an
-    equivalence gap that widens is a correctness regression, not noise.
+    equivalence gap that widens is a correctness regression, not noise;
+  * **drifts** (must stay put, either direction): reproduced paper
+    quantities like the CoCaR-vs-best-baseline improvement ratio; fail
+    when a fresh value moves more than the per-key relative tolerance
+    from the baseline — in either direction, since a quality *jump* is as
+    suspicious as a drop when the algorithms did not change.
 
 Perf ratios are only compared when the fresh run used the same scale
 knobs (scale fields below) as the baseline; a CI smoke run at a smaller
@@ -57,6 +62,23 @@ MANIFEST = {
         "gaps": ["equivalence.max_obj_gap", "equivalence.max_metric_gap",
                  "throughput.avg_precision_gap"],
         "flags": ["equivalence.decisions_identical"],
+    },
+    "BENCH_baselines.json": {
+        "scale": ["throughput.variants", "throughput.n_seeds",
+                  "throughput.n_users", "throughput.pdhg_iters"],
+        "ratios": ["throughput.speedup_vs_host_loop"],
+        "gaps": ["equivalence.max_obj_gap", "equivalence.max_metric_gap"]
+        + [f"equivalence.per_policy.{p}.metric_gap"
+           for p in ("cocar", "spr3", "greedy", "random", "gatmarl")],
+        "flags": ["equivalence.decisions_identical"],
+        # the reproduced Sec. VII-B headline: CoCaR over the best
+        # baseline.  Scale-keyed on the comparison block itself (the
+        # equivalence grid), which every CI path runs at the same config
+        # — so this gate engages on smoke, full, and nightly runs alike.
+        "drifts": [("comparison.improvement_ratio", 0.15)],
+        "drift_scale": ["comparison.variants", "comparison.n_seeds",
+                        "comparison.n_users", "comparison.best_of",
+                        "comparison.pdhg_iters", "comparison.episodes"],
     },
 }
 
@@ -130,6 +152,24 @@ def check_file(name, spec, base, fresh):
             msgs.append(("fail", f"{name}:{key} is {f!r}, must be true"))
         else:
             msgs.append(("ok", f"{name}:{key} true"))
+    drift_scale_keys = spec.get("drift_scale", spec["scale"])
+    drift_same_scale = all(_get(base, k) == _get(fresh, k)
+                           for k in drift_scale_keys)
+    for key, rtol in spec.get("drifts", ()):
+        b, f = _get(base, key), _get(fresh, key)
+        if f is None:
+            msgs.append(("warn", f"{name}:{key} not produced by this run"))
+        elif b is None:
+            msgs.append(("warn", f"{name}:{key} has no baseline yet"))
+        elif not drift_same_scale:
+            msgs.append(("warn", f"{name}:{key} drift check skipped "
+                         "(scale mismatch vs baseline)"))
+        elif abs(f - b) > rtol * abs(b):
+            msgs.append(("fail", f"{name}:{key} drifted beyond {rtol:.0%}: "
+                         f"{f:.3f} vs baseline {b:.3f}"))
+        else:
+            msgs.append(("ok", f"{name}:{key} {f:.3f} "
+                         f"(baseline {b:.3f}, tol {rtol:.0%})"))
     if not any(level == "ok" for level, _ in msgs):
         msgs.append(("fail", f"{name}: nothing comparable was produced "
                      "(schema break?)"))

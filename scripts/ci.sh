@@ -16,17 +16,24 @@ else
     echo "ci.sh: ruff not installed, skipping lint"
 fi
 
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+# --durations surfaces the slowest tests in the job log; REPRO_TEST_TIMEOUT
+# (set by the CI workflow, see tests/conftest.py) hard-kills a hung device
+# dispatch after N seconds instead of eating the whole job budget
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q --durations=15 "$@"
 
-# bench smokes: NumPy OnlineSim == scan engine on every policy, and the
-# NumPy round+repair == fused offline pipeline on a small grid.  Fresh
-# results land in the results/bench/ci/ scratch dir — never over the
-# committed baselines — and check_bench compares the two (correctness
-# gaps always; perf ratios only for same-scale runs).  JAX_ENABLE_X64 is
-# scoped to these steps: the equivalence engines want f64 defaults, while
-# the Pallas kernel tests above pin float32.
+# bench smokes: NumPy OnlineSim == scan engine on every policy, the
+# NumPy round+repair == fused offline pipeline, and every offline
+# baseline's device kernel == its NumPy oracle, all on small grids.
+# Fresh results land in the results/bench/ci/ scratch dir — never over
+# the committed baselines — and check_bench compares the two (correctness
+# gaps always; perf ratios and drift checks only for same-scale runs).
+# JAX_ENABLE_X64 is scoped to these steps: the equivalence engines want
+# f64 defaults, while the Pallas kernel tests above pin float32.
 JAX_ENABLE_X64=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.bench_online --smoke
 JAX_ENABLE_X64=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.bench_offline --smoke
+JAX_ENABLE_X64=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.bench_baselines --smoke
 python scripts/check_bench.py --fresh results/bench/ci

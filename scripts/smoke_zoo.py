@@ -5,9 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.models import model as M
+from repro.models import model as M, partition
 from repro.models.config import build_plan
-from repro.models import partition
 
 B, S = 2, 32
 

@@ -26,8 +26,7 @@ from repro.core.jdcr import JDCRInstance, objective_sel
 from repro.core.rounding import (draw_rounding_uniforms, repair,
                                  repair_device, round_from_uniforms)
 from repro.mec import metrics as MET
-from repro.mec.scenario import MECConfig, Scenario, StackedWindows, \
-    stack_instances
+from repro.mec.scenario import MECConfig, Scenario, StackedWindows, stack_instances
 
 
 def _round_and_repair(inst: JDCRInstance, x_f, A_f, seed: int, best_of: int):
@@ -173,6 +172,222 @@ def offline_pipeline_host(stacked: StackedWindows, x_frac, A_frac,
             per_seed.append((x_b, A_b, info))
         results.append(per_seed)
     return results
+
+
+# ---------------------------------------------------------------------------
+# the fused POLICY grid: CoCaR + all four Sec. VII-B baselines, one dispatch
+# ---------------------------------------------------------------------------
+
+#: Policy order of the fused comparison grid (paper Sec. VII-B zoo).
+OFFLINE_POLICIES = ("cocar", "spr3", "greedy", "random", "gatmarl")
+
+
+def _eval_policy(data, x, A):
+    """Uniform evaluation stage: execution-time enforcement + window
+    metrics, both on-device (identical thresholds to the host path)."""
+    A_e = MET.enforce_device(data, x, A)
+    return MET.window_metrics_device(data, x, A_e)
+
+
+def _policy_kernel(data, u_cat, u_phi, u_cat_s, u_phi_s, u_perm, u_h,
+                   u_route, gat_params, gat_feats, gat_adj, iters, n_seeds):
+    """One padded window through ALL five policies, entirely in jnp.
+
+    CoCaR runs the fused LP → round → repair → argmax pipeline
+    (``_pipeline_kernel``); SPR³ runs the *same* LP + rounding + repair
+    kernels on the relaxed pytree (one trial per seed); Greedy and the
+    GatMARL rollout are deterministic (computed once, broadcast across the
+    seed axis); Random consumes one pre-drawn uniform set per seed.  Every
+    policy then passes through the same enforcement + metrics stage.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import baselines as BL
+
+    S = n_seeds
+    out = {}
+
+    # repaired CoCaR solutions already satisfy the execution-time checks
+    # (enforce is an identity post-repair, asserted in
+    # tests/test_offline_batched.py), so the pipeline's own metrics stand
+    coc = _pipeline_kernel(data, u_cat, u_phi, iters, n_seeds)
+    out["cocar"] = {"x": coc["x"], "A": coc["A"], "metrics": coc["metrics"]}
+    out["lp_obj"] = coc["lp_obj"]
+    out["cocar_frac"] = {"x": coc["x_frac"], "A": coc["A_frac"]}
+
+    relaxed = BL.spr3_relax_device(data)
+    xs_f, As_f = LP._pdhg_kernel(relaxed, iters)
+    xs_r, As_r = round_from_uniforms(xs_f, As_f, relaxed.onehot_mu,
+                                     u_cat_s, u_phi_s)
+    xs, As = jax.vmap(repair_device, in_axes=(None, 0, 0))(relaxed,
+                                                           xs_r, As_r)
+    out["spr3"] = {"x": xs, "A": As,
+                   "metrics": jax.vmap(
+                       lambda xx, aa: _eval_policy(data, xx, aa))(xs, As)}
+    out["spr3_frac"] = {"x": xs_f, "A": As_f}
+
+    def once(x1, A1):
+        met = _eval_policy(data, x1, A1)
+        return {"x": jnp.broadcast_to(x1, (S,) + x1.shape),
+                "A": jnp.broadcast_to(A1, (S,) + A1.shape),
+                "metrics": jax.tree.map(
+                    lambda v: jnp.broadcast_to(v, (S,)), met)}
+
+    out["greedy"] = once(*BL.greedy_device(data))
+    out["gatmarl"] = once(*BL.gat_rollout_device(data, gat_params,
+                                                 gat_feats, gat_adj))
+
+    xr, Ar = jax.vmap(BL.random_device, in_axes=(None, 0, 0, 0))(
+        data, u_perm, u_h, u_route)
+    out["random"] = {"x": xr, "A": Ar,
+                     "metrics": jax.vmap(
+                         lambda xx, aa: _eval_policy(data, xx, aa))(xr, Ar)}
+    return out
+
+
+@functools.cache
+def _policy_jitted():
+    import jax
+    fn = jax.vmap(_policy_kernel, in_axes=(0,) * 11 + (None, None))
+    return jax.jit(fn, static_argnums=(11, 12))
+
+
+def policy_uniforms(stacked: StackedWindows, seed: int, n_seeds: int,
+                    best_of: int):
+    """All the randomness of one policy-grid run, pre-drawn at the padded
+    stack shape and shared verbatim by both engines: CoCaR's rounding
+    uniforms (``n_seeds × best_of`` trials), SPR³'s (one trial per seed),
+    and the Random baseline's permutation/pick/route uniforms."""
+    import jax
+
+    from repro.core import baselines as BL
+
+    B = len(stacked)
+    N, U, H = stacked.data.T.shape[1:]
+    M = stacked.data.sizes.shape[1]
+    k_coc, k_spr, k_bl = jax.random.split(jax.random.PRNGKey(seed), 3)
+    u_cat, u_phi = draw_rounding_uniforms(k_coc, n_seeds * max(best_of, 1),
+                                          N, M, U, H, batch=B)
+    u_cat_s, u_phi_s = draw_rounding_uniforms(k_spr, n_seeds, N, M, U, H,
+                                              batch=B)
+    u_perm, u_h, u_route = BL.draw_baseline_uniforms(k_bl, N, M, U,
+                                                     n_seeds=n_seeds,
+                                                     batch=B)
+    return (u_cat, u_phi, u_cat_s, u_phi_s, u_perm, u_h, u_route)
+
+
+def gat_grid_policies(stacked: StackedWindows, seed: int = 0,
+                      episodes: int = 150):
+    """Host-side GatMARL training for every window in the stack (cached
+    per topology/catalog shape), stacked for the vmapped rollout: a
+    params pytree with a leading batch axis + padded features/adjacency.
+    """
+    from repro.core import baselines as BL
+
+    n_pad = stacked.data.R.shape[1]
+    params, feats, adjs = [], [], []
+    for inst in stacked.insts:
+        params.append(BL.gat_policy(inst, seed, episodes))
+        feats.append(BL.gat_features(inst, n_pad=n_pad))
+        adjs.append(BL.gat_adj(inst, n_pad=n_pad))
+    stacked_params = {k: np.stack([p[k] for p in params])
+                      for k in params[0]}
+    return stacked_params, np.stack(feats), np.stack(adjs)
+
+
+def policy_grid_device(stacked: StackedWindows, seed: int = 0,
+                       pdhg_iters: int = 4000, best_of: int = 8,
+                       n_seeds: int = 1, episodes: int = 150,
+                       uniforms=None, gat=None):
+    """CoCaR + the four baselines over (windows × seeds) in ONE jitted/
+    vmapped f64 dispatch (GatMARL training excepted — host-side, cached).
+
+    Returns nested numpy: ``out[policy] = {x (B,S,...), A (B,S,...),
+    metrics {k: (B,S)}}`` plus ``lp_obj (B,)`` and SPR³'s fractional
+    solution (``spr3_frac``) for the host oracle.
+    """
+    from jax.experimental import enable_x64
+
+    uniforms = uniforms if uniforms is not None else \
+        policy_uniforms(stacked, seed, n_seeds, best_of)
+    gat = gat if gat is not None else \
+        gat_grid_policies(stacked, seed, episodes)
+    gat_params, gat_feats, gat_adj = gat
+    with enable_x64():
+        out = _policy_jitted()(stacked.data, *uniforms, gat_params,
+                               gat_feats, gat_adj, int(pdhg_iters),
+                               int(n_seeds))
+
+    def to_np(tree):
+        if isinstance(tree, dict):
+            return {k: to_np(v) for k, v in tree.items()}
+        return np.asarray(tree)
+
+    return to_np(out)
+
+
+def policy_grid_host(stacked: StackedWindows, uniforms, gat,
+                     x_frac, A_frac, spr3_frac, n_seeds: int = 1):
+    """NumPy reference of ``policy_grid_device``: per-(window, seed)
+    Python loops over the *same* fractional LP solutions, rounding
+    uniforms, and trained GatMARL params.  This is both the correctness
+    oracle and (driven per-instance) the host-loop path
+    ``benchmarks/bench_baselines.py`` measures against.
+
+    Returns ``results[policy][b][s] = (x, A, metrics)`` at true shapes.
+    """
+    from repro.core import baselines as BL
+
+    u_cat, u_phi, u_cat_s, u_phi_s, u_perm, u_h, u_route = uniforms
+    gat_params, gat_feats, gat_adj = gat
+    results = {p: [] for p in OFFLINE_POLICIES}
+
+    coc = offline_pipeline_host(stacked, x_frac, A_frac, u_cat, u_phi,
+                                n_seeds=n_seeds)
+    spr_fracs = stacked.unstack(spr3_frac["x"], spr3_frac["A"])
+    for i, inst in enumerate(stacked.insts):
+        N, U = inst.N, inst.U
+        results["cocar"].append([
+            (x, A, info["metrics"]) for x, A, info in coc[i]])
+
+        xs_f, As_f = spr_fracs[i]
+        xs, As = BL.spr3_from_fractional(
+            inst, xs_f, As_f, u_cat_s[i, :, :N], u_phi_s[i, :, :N, :U])
+        results["spr3"].append([
+            (xs[s], As[s], MET.window_metrics(inst, xs[s], As[s]))
+            for s in range(n_seeds)])
+
+        xg, Ag = BL.greedy(inst)
+        mg = MET.window_metrics(inst, xg, Ag)
+        results["greedy"].append([(xg, Ag, mg)] * n_seeds)
+
+        per_rand = []
+        for s in range(n_seeds):
+            xr, Ar = BL.random_from_uniforms(
+                inst, u_perm[i, s, :N], u_h[i, s, :N], u_route[i, s, :U])
+            per_rand.append((xr, Ar, MET.window_metrics(inst, xr, Ar)))
+        results["random"].append(per_rand)
+
+        params_i = {k: v[i] for k, v in gat_params.items()}
+        xm, Am = BL.gat_rollout_host(inst, params_i, feats=gat_feats[i],
+                                     adj=gat_adj[i])
+        mm = MET.window_metrics(inst, xm, Am)
+        results["gatmarl"].append([(xm, Am, mm)] * n_seeds)
+    return results
+
+
+def improvement_ratio(metrics_by_policy, key: str = "avg_precision"):
+    """The paper's headline number (Sec. VII-B): grid-mean CoCaR ``key``
+    over the best baseline's.  ``metrics_by_policy[p]`` is any array of
+    per-(window, seed) values."""
+    means = {p: float(np.mean(np.asarray(v, dtype=np.float64)))
+             for p, v in metrics_by_policy.items()}
+    best_val = max(v for p, v in means.items() if p != "cocar")
+    best = next(p for p, v in means.items()
+                if p != "cocar" and v == best_val)
+    return {"ratio": means["cocar"] / max(best_val, 1e-12),
+            "best_baseline": best, "means": means}
 
 
 def _unstack_device(stacked: StackedWindows, out, n_seeds: int):

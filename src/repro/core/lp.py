@@ -140,6 +140,11 @@ class PDHGData(NamedTuple):
                             kernel freezes routing mass at masked rows and
                             sizes the route-dual step from the mask, so
                             padded rows never perturb real ones
+      home_onehot (U, N)    one-hot of each user's home BS — unused by the
+                            LP iteration, but the baseline kernels riding
+                            on the same pytree (``repro.core.baselines``)
+                            key home-BS routing off it; zero row for
+                            padded users
     """
     sizes: object
     prec: object
@@ -151,10 +156,13 @@ class PDHGData(NamedTuple):
     ddl: object
     s_u: object
     bs_mask: object
+    home_onehot: object
 
 
 def pdhg_data(inst: JDCRInstance) -> PDHGData:
     """Extract the solver-facing arrays from one instance."""
+    home_onehot = np.zeros((inst.U, inst.N))
+    home_onehot[np.arange(inst.U), inst.home] = 1.0
     return PDHGData(
         sizes=np.asarray(inst.sizes, dtype=np.float64),
         prec=np.asarray(inst.prec, dtype=np.float64),
@@ -165,7 +173,8 @@ def pdhg_data(inst: JDCRInstance) -> PDHGData:
         R=np.asarray(inst.R, dtype=np.float64),
         ddl=np.asarray(inst.ddl, dtype=np.float64),
         s_u=np.asarray(inst.s_u, dtype=np.float64),
-        bs_mask=np.ones(inst.N))
+        bs_mask=np.ones(inst.N),
+        home_onehot=home_onehot)
 
 
 def _pdhg_kernel(data: PDHGData, iters: int):
@@ -178,7 +187,9 @@ def _pdhg_kernel(data: PDHGData, iters: int):
     import jax
     import jax.numpy as jnp
 
-    sizes, _, prec_u, T, L, onehot_mu, R, ddl, s_u, bs_mask = data
+    sizes, prec_u, T, L, onehot_mu, R, ddl, s_u, bs_mask = (
+        data.sizes, data.prec_u, data.T, data.L, data.onehot_mu,
+        data.R, data.ddl, data.s_u, data.bs_mask)
     N, U, H = T.shape
     M = sizes.shape[0]
 

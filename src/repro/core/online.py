@@ -27,8 +27,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.mec.scenario import MECConfig, Scenario
-from repro.traces.generators import DecisionStream, Trace, check_trace, \
-    default_stream
+from repro.traces.generators import DecisionStream, Trace, check_trace, default_stream
 from repro.traces.registry import default_trace
 
 

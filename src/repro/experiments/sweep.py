@@ -29,6 +29,7 @@ from __future__ import annotations
 import json
 import pathlib
 
+import numpy as np
 
 from repro.core.cocar import cocar_grid
 from repro.mec.scenario import MECConfig, Scenario, config_grid
@@ -72,6 +73,73 @@ def run_sweep(base: MECConfig = None, axes: dict = None, window: int = 0,
             row.update(info["metrics"])
             rows.append(row)
     return rows
+
+
+def run_policy_sweep(base: MECConfig = None, axes: dict = None,
+                     window: int = 0, pdhg_iters: int = 4000,
+                     best_of: int = 8, seed: int = 0, n_seeds: int = 1,
+                     episodes: int = 60, backend: str = "device"):
+    """The paper's Sec. VII-B headline comparison — CoCaR vs SPR³ /
+    Greedy / Random / GatMARL — across (grid variants × rounding seeds ×
+    policies), every policy's decisions AND the shared evaluation stage in
+    ONE fused device dispatch (GatMARL training excepted: host-side,
+    cached per topology).
+
+    Returns ``(rows, summary)``: one row dict per (variant, seed, policy)
+    plus a summary with per-policy grid means and the CoCaR-vs-best-
+    baseline improvement ratio.
+    """
+    from repro.core.baselines import spr3_relaxed
+    from repro.core.cocar import (OFFLINE_POLICIES, gat_grid_policies,
+                                  improvement_ratio, policy_grid_device,
+                                  policy_grid_host, policy_uniforms)
+    from repro.core.lp import solve_lp_pdhg_batched
+    from repro.mec.scenario import stack_instances
+
+    base = base or MECConfig(n_users=40)
+    axes = axes or DEFAULT_AXES
+    cfgs = config_grid(base, axes)
+    scenarios = [Scenario(c) for c in cfgs]
+    insts = [sc.instance(window, sc.empty_cache()) for sc in scenarios]
+    stacked = stack_instances(insts)
+    uniforms = policy_uniforms(stacked, seed, n_seeds, best_of)
+    gat = gat_grid_policies(stacked, seed, episodes)
+
+    if backend == "device":
+        out = policy_grid_device(stacked, seed=seed, pdhg_iters=pdhg_iters,
+                                 best_of=best_of, n_seeds=n_seeds,
+                                 uniforms=uniforms, gat=gat)
+        met = {p: out[p]["metrics"] for p in OFFLINE_POLICIES}
+    elif backend == "host":
+        res = solve_lp_pdhg_batched(stacked.data, iters=pdhg_iters)
+        relaxed = stack_instances([spr3_relaxed(i) for i in insts])
+        res_s = solve_lp_pdhg_batched(relaxed.data, iters=pdhg_iters)
+        host = policy_grid_host(stacked, uniforms, gat, res.x, res.A,
+                                {"x": res_s.x, "A": res_s.A},
+                                n_seeds=n_seeds)
+        met = {p: {k: np.asarray(
+            [[host[p][b][s][2][k] for s in range(n_seeds)]
+             for b in range(len(stacked))])
+            for k in host[p][0][0][2]} for p in OFFLINE_POLICIES}
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    rows = []
+    for i, cfg in enumerate(cfgs):
+        for s in range(n_seeds):
+            for p in OFFLINE_POLICIES:
+                row = {k: getattr(cfg, k) for k in axes}
+                if n_seeds > 1:
+                    row["rounding_seed"] = s
+                row["policy"] = p
+                row.update({k: float(v[i, s])
+                            for k, v in met[p].items()})
+                rows.append(row)
+    summary = improvement_ratio(
+        {p: met[p]["avg_precision"] for p in OFFLINE_POLICIES})
+    summary["avg_qoe"] = {p: float(np.mean(met[p]["avg_qoe"]))
+                          for p in OFFLINE_POLICIES}
+    return rows, summary
 
 
 #: Default online sweep: 2 config axes x 2 trace families x 2 policies
@@ -130,9 +198,15 @@ def format_table(rows) -> str:
     return "\n".join(lines)
 
 
-def main(online: bool = False, backend: str = "device", n_seeds: int = 1):
+def main(online: bool = False, backend: str = "device", n_seeds: int = 1,
+         policies: bool = False):
+    payload = None
     if online:
         rows, name = run_online_sweep(), "online_grid.json"
+    elif policies:
+        rows, summary = run_policy_sweep(backend=backend, n_seeds=n_seeds)
+        name = "policy_grid.json"
+        payload = {"rows": rows, "summary": summary}
     else:
         rows = run_sweep(backend=backend, n_seeds=n_seeds)
         name = "grid.json"
@@ -140,8 +214,13 @@ def main(online: bool = False, backend: str = "device", n_seeds: int = 1):
     out = pathlib.Path("results") / "sweep"
     out.mkdir(parents=True, exist_ok=True)
     path = out / name
-    path.write_text(json.dumps(rows, indent=1, default=float))
-    print(f"\n{len(rows)} variants -> {path}")
+    path.write_text(json.dumps(payload if payload is not None else rows,
+                               indent=1, default=float))
+    if policies:
+        s = payload["summary"]
+        print(f"\nCoCaR vs best baseline ({s['best_baseline']}): "
+              f"{s['ratio']:.2f}x avg served precision")
+    print(f"\n{len(rows)} rows -> {path}")
     return rows
 
 
@@ -151,6 +230,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description="scenario-grid sweeps")
     ap.add_argument("--online", action="store_true",
                     help="trace-family grid through the scan engine")
+    ap.add_argument("--policies", action="store_true",
+                    help="CoCaR vs the Sec. VII-B baseline zoo, one "
+                         "dispatch across (variants x seeds x policies)")
     ap.add_argument("--host", action="store_true",
                     help="NumPy round+repair reference loop")
     ap.add_argument("--seeds", type=int, default=1,
@@ -158,4 +240,4 @@ if __name__ == "__main__":
     args = ap.parse_args()
     main(online=args.online,
          backend="host" if args.host else "device",
-         n_seeds=args.seeds)
+         n_seeds=args.seeds, policies=args.policies)

@@ -24,8 +24,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro import configs                                   # noqa: E402
 from repro.distribution import sharding as shd              # noqa: E402
-from repro.launch.hlo_analysis import analyse_hlo           # noqa: E402
 from repro.launch import specs as SP                        # noqa: E402
+from repro.launch.hlo_analysis import analyse_hlo           # noqa: E402
 from repro.launch.mesh import make_production_mesh          # noqa: E402
 from repro.launch.steps import (init_train_state,           # noqa: E402
                                 make_decode_step,

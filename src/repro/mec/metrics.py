@@ -5,31 +5,72 @@ hit if its end-to-end latency fits ddl_u AND the model finished loading
 before the request's initiation time s_u — baselines that ignored loading
 time in their decisions lose those requests here (exactly the paper's
 evaluation protocol).
+
+Enforcement and metrics exist twice (PR-3 style): the NumPy path
+(``enforce`` / ``window_metrics``) and the pure-jnp path
+(``enforce_device`` / ``window_metrics_device``) the fused policy grid
+vmaps over.  Decision-critical sums go through ``jdcr.tree_sum`` and
+comparisons select (never multiply) precision values, so the two paths
+kick out the *same* routes and report numbers within 1e-9.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.jdcr import JDCRInstance
+from repro.core.jdcr import JDCRInstance, _jnp, objective_sel, tree_sum
+
+#: Eq. 40 QoE decay rate (matches ``OnlineConfig.alpha``).
+QOE_ALPHA = 0.9
+
+_TOL = 1e-9
 
 
 def enforce(inst: JDCRInstance, x, A):
     """Zero out routes that are infeasible at execution time."""
+    from repro.core.rounding import _dedupe_routes
+
     A = np.array(A, dtype=np.float64)
     x_sel = x[:, inst.m_u, 1:]
-    A = A * (x_sel > 0)
-    # one route per user, best precision
+    A = np.where(x_sel > 0, A, 0.0)
+    # one route per user, best precision (exact ties -> smallest (n, h))
     prec_u = inst.prec[inst.m_u, 1:]
-    for u in np.nonzero(A.sum(axis=(0, 2)) > 1)[0]:
-        nz = np.argwhere(A[:, u, :] > 0)
-        best = max(nz, key=lambda nh: prec_u[u, nh[1]])
-        A[:, u, :] = 0
-        A[best[0], u, best[1]] = 1
-    lat = np.einsum("nuh,nuh->u", A, inst.e2e_latency())
-    load = np.einsum("nuh,nuh->u", A, inst.load_latency())
-    bad = (lat > inst.ddl + 1e-9) | (load > inst.s_u + 1e-9)
+    A = _dedupe_routes(prec_u, A)
+    T = inst.e2e_latency()
+    L = inst.load_latency()
+    lat = tree_sum(tree_sum(np.where(A > 0, T, 0.0), -1), 0)
+    load = tree_sum(tree_sum(np.where(A > 0, L, 0.0), -1), 0)
+    bad = (lat > inst.ddl + _TOL) | (load > inst.s_u + _TOL)
     A[:, bad, :] = 0.0
     return A
+
+
+def enforce_device(data, x, A):
+    """``enforce`` as a pure jnp function of one padded window — the
+    uniform evaluation stage of the fused policy grid.  Identity on
+    repaired CoCaR solutions; for baselines that ignored latency or
+    loading time in their decisions, this is where those routes die (on
+    exactly the same threshold sums as the host path)."""
+    import jax.numpy as jnp
+
+    from repro.core.rounding import _dedupe_device
+
+    x_sel = jnp.einsum("nmh,um->nuh", x[:, :, 1:], data.onehot_mu)
+    A = jnp.where(x_sel > 0, A, 0.0)
+    A = _dedupe_device(data.prec_u, A)
+    lat = tree_sum(tree_sum(jnp.where(A > 0, data.T, 0.0), -1), 0)
+    load = tree_sum(tree_sum(jnp.where(A > 0, data.L, 0.0), -1), 0)
+    bad = (lat > data.ddl + _TOL) | (load > data.s_u + _TOL)
+    return jnp.where(bad[None, :, None], 0.0, A)
+
+
+def _qoe_per_user(prec_sel, lat, theta, served):
+    """Eq. 40 per served user: p · max(0, 1 − (latency − θ_u) · α), with
+    θ_u the user's minimum achievable latency (the online engine's
+    normalizer, per-user here).  Same elementwise float ops on both
+    engines."""
+    xp = np if isinstance(lat, np.ndarray) else _jnp()
+    decay = xp.maximum(1.0 - (lat - theta) * QOE_ALPHA, 0.0)
+    return xp.where(served, prec_sel * decay, 0.0)
 
 
 def window_metrics(inst: JDCRInstance, x, A):
@@ -38,12 +79,18 @@ def window_metrics(inst: JDCRInstance, x, A):
     served = A.sum(axis=(0, 2)) > 0
     precision = float(np.sum(A * prec_u[None]))
     mem_used = np.sum(x * inst.sizes[None], axis=(1, 2))
+    T = inst.e2e_latency()
+    lat_u = tree_sum(tree_sum(np.where(A > 0, T, 0.0), -1), 0)
+    theta = T.min(axis=(0, 2))
+    prec_sel = tree_sum(tree_sum(np.where(A > 0, prec_u[None], 0.0), -1), 0)
+    qoe_u = _qoe_per_user(prec_sel, lat_u, theta, served)
     return {
         "precision_sum": precision,
         "hits": int(served.sum()),
         "users": inst.U,
         "avg_precision": precision / inst.U,
         "hit_rate": served.mean(),
+        "avg_qoe": float(tree_sum(qoe_u, -1) / inst.U),
         "mem_util": float(np.mean(mem_used / inst.R)),
     }
 
@@ -66,16 +113,15 @@ def window_metrics_device(data, x, A):
     """``window_metrics`` as a pure jnp function of one padded window —
     the last stage of the fused offline pipeline (``repro.core.cocar``).
 
-    Valid for *repaired* solutions, where ``enforce`` is an identity:
+    Valid for *enforced* solutions, where ``enforce`` is an identity:
     repair already dedupes routes, pins them to cached submodels, and
     kicks out latency/load violators with the same thresholds — asserted
-    in ``tests/test_offline_batched.py``.  Padded base stations and users
-    are masked out of every aggregate, so the numbers equal the host
+    in ``tests/test_offline_batched.py``; the policy grid applies
+    ``enforce_device`` first.  Padded base stations and users are masked
+    out of every aggregate, so the numbers equal the host
     ``window_metrics`` of the unpadded instance.
     """
     import jax.numpy as jnp
-
-    from repro.core.jdcr import objective_sel, tree_sum
 
     user_mask = tree_sum(data.onehot_mu, -1) > 0
     bs_mask = data.bs_mask > 0
@@ -86,6 +132,12 @@ def window_metrics_device(data, x, A):
                              -1), -1)                       # (N,)
     util = jnp.where(bs_mask, used / jnp.maximum(data.R, 1e-12), 0.0)
     n_bs = tree_sum(bs_mask.astype(jnp.float64), -1)
+    lat_u = tree_sum(tree_sum(jnp.where(A > 0, data.T, 0.0), -1), 0)
+    theta = jnp.min(jnp.where(bs_mask[:, None, None], data.T, jnp.inf),
+                    axis=(0, 2))
+    prec_sel = tree_sum(tree_sum(
+        jnp.where(A > 0, data.prec_u[None], 0.0), -1), 0)
+    qoe_u = _qoe_per_user(prec_sel, lat_u, theta, served)
     return {
         "precision_sum": precision,
         "hits": tree_sum(served.astype(jnp.float64), -1),
@@ -93,5 +145,6 @@ def window_metrics_device(data, x, A):
         "avg_precision": precision / jnp.maximum(users, 1.0),
         "hit_rate": tree_sum(served.astype(jnp.float64), -1)
         / jnp.maximum(users, 1.0),
+        "avg_qoe": tree_sum(qoe_u, -1) / jnp.maximum(users, 1.0),
         "mem_util": tree_sum(util, -1) / jnp.maximum(n_bs, 1.0),
     }

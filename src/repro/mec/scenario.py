@@ -219,6 +219,8 @@ def stack_instances(insts: list) -> StackedWindows:
         fields["ddl"].append(np.pad(d.ddl, (0, du)))
         fields["s_u"].append(np.pad(d.s_u, (0, du)))
         fields["bs_mask"].append(np.pad(d.bs_mask, (0, dn)))
+        fields["home_onehot"].append(np.pad(d.home_onehot,
+                                            ((0, du), (0, dn))))
     data = PDHGData(**{k: np.stack(v) for k, v in fields.items()})
     return StackedWindows(
         data=data,

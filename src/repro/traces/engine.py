@@ -35,8 +35,7 @@ from typing import NamedTuple
 
 import numpy as np
 
-from repro.traces.generators import DecisionStream, check_trace, \
-    default_stream
+from repro.traces.generators import DecisionStream, check_trace, default_stream
 
 POLICIES = ("cocar-ol", "lfu", "lfu-mad", "random")
 LFU_MAD_DECAY = 0.8              # matches online._freq_weighted

@@ -10,6 +10,22 @@ sys.path.insert(0, os.path.dirname(__file__))
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
+# Hard per-test timeout (seconds), enabled by REPRO_TEST_TIMEOUT (CI sets
+# it; unset locally).  A hung XLA dispatch never returns control to the
+# Python signal machinery, so a plain SIGALRM handler cannot fail the test
+# — faulthandler's watchdog thread dumps every stack and kills the process
+# instead, which is exactly the "fail fast with a traceback" CI wants.
+_TEST_TIMEOUT = float(os.environ.get("REPRO_TEST_TIMEOUT", "0") or 0)
+
+
+@pytest.fixture(autouse=_TEST_TIMEOUT > 0)
+def _per_test_timeout():
+    import faulthandler
+
+    faulthandler.dump_traceback_later(_TEST_TIMEOUT, exit=True)
+    yield
+    faulthandler.cancel_dump_traceback_later()
+
 
 @pytest.fixture(scope="session")
 def rng():

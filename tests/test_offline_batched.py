@@ -6,8 +6,7 @@ import numpy as np
 
 from repro.core import cocar as CC
 from repro.core import lp as LP
-from repro.core.jdcr import JDCRInstance, check_feasible, objective_sel, \
-    tree_sum
+from repro.core.jdcr import JDCRInstance, check_feasible, objective_sel, tree_sum
 from repro.core.rounding import repair, repair_device, round_from_uniforms
 from repro.mec import metrics as MET
 from repro.mec.scenario import MECConfig, Scenario, stack_instances
