@@ -80,6 +80,25 @@ MANIFEST = {
                         "comparison.n_users", "comparison.best_of",
                         "comparison.pdhg_iters", "comparison.episodes"],
     },
+    "BENCH_scale.json": {
+        "scale": ["throughput.variants", "throughput.n_seeds",
+                  "throughput.n_users", "throughput.pdhg_iters",
+                  "throughput.devices"],
+        "ratios": ["throughput.sharded_speedup"],
+        "gaps": ["equivalence.max_obj_gap", "equivalence.max_metric_gap",
+                 "throughput.decision_obj_gap",
+                 "throughput.decision_metric_gap"],
+        # the executor's contract: sharded/bucketed/chunked dispatch makes
+        # the SAME decisions as the one-device vmap path, and chunked
+        # streaming keeps peak live input bytes under half the one-shot
+        # grid's (the CI smoke produces the equivalence flags; the
+        # throughput flags exist on full-scale runs)
+        "flags": ["equivalence.decisions_identical",
+                  "equivalence.bucketed_identical",
+                  "equivalence.online_identical",
+                  "throughput.decisions_identical",
+                  "throughput.memory_bounded"],
+    },
 }
 
 

@@ -36,4 +36,12 @@ JAX_ENABLE_X64=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.bench_offline --smoke
 JAX_ENABLE_X64=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.bench_baselines --smoke
+# the sharded grid executor under a forced 8-device host mesh: shard_map
+# + bucketed batching + chunk streaming must reproduce the one-device
+# dispatch's decisions exactly (the flag is also set inside bench_scale
+# before its first jax import; exporting it here keeps the subprocess
+# honest even if that import order ever changes)
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    JAX_ENABLE_X64=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.bench_scale --smoke
 python scripts/check_bench.py --fresh results/bench/ci

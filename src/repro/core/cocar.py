@@ -259,14 +259,25 @@ def policy_uniforms(stacked: StackedWindows, seed: int, n_seeds: int,
     stack shape and shared verbatim by both engines: CoCaR's rounding
     uniforms (``n_seeds × best_of`` trials), SPR³'s (one trial per seed),
     and the Random baseline's permutation/pick/route uniforms."""
+    B, N, U, M, H = stacked.signature
+    return policy_uniforms_dims((B, N, M, U, H), seed, n_seeds, best_of)
+
+
+def policy_uniforms_dims(dims, seed, n_seeds: int, best_of: int):
+    """``policy_uniforms`` from bare grid dimensions ``(B, N, M, U, H)``
+    — same key splits, same draws.  The ``repro.scale`` executor draws
+    these ONCE at the grid's global max shape and slices them per size
+    bucket, so bucketed dispatches consume exactly the uniforms the
+    max-padded single dispatch would.  ``B=None`` drops the batch axis
+    and ``seed`` may be a PRNG key — the executor's ``per_element``
+    scheme draws one unbatched set per grid element that way."""
     import jax
 
     from repro.core import baselines as BL
 
-    B = len(stacked)
-    N, U, H = stacked.data.T.shape[1:]
-    M = stacked.data.sizes.shape[1]
-    k_coc, k_spr, k_bl = jax.random.split(jax.random.PRNGKey(seed), 3)
+    B, N, M, U, H = dims
+    key = jax.random.PRNGKey(seed) if isinstance(seed, int) else seed
+    k_coc, k_spr, k_bl = jax.random.split(key, 3)
     u_cat, u_phi = draw_rounding_uniforms(k_coc, n_seeds * max(best_of, 1),
                                           N, M, U, H, batch=B)
     u_cat_s, u_phi_s = draw_rounding_uniforms(k_spr, n_seeds, N, M, U, H,
@@ -411,23 +422,37 @@ def _unstack_device(stacked: StackedWindows, out, n_seeds: int):
 
 
 def cocar_grid(insts, seed: int = 0, pdhg_iters: int = 4000,
-               best_of: int = 8, n_seeds: int = 1, backend: str = "device"):
+               best_of: int = 8, n_seeds: int = 1, backend: str = "device",
+               devices: int = None, chunk_size: int = 0,
+               max_buckets: int = 1):
     """CoCaR over a grid of independent windows × rounding seeds.
 
-    ``backend="device"``: ONE fused dispatch (LP → rounding → repair →
-    objective/metrics, trial argmax on device).  ``backend="host"``: the
-    legacy path — batched LP dispatch, then per-(window, seed, trial)
-    NumPy rounding + repair.  Returns ``results[b][s] = (x, A, info)``.
+    ``backend="device"``: the fused LP → rounding → repair → metrics
+    pipeline through the ``repro.scale`` grid executor on one device;
+    ``backend="sharded"``: the same executor partitioning the grid
+    across a ``devices``-wide host mesh (decision-identical — see
+    ``repro.scale.executor``).  ``devices``/``chunk_size``/``max_buckets``
+    tune the executor's mesh width, streaming chunk, and size-bucket
+    count (the default ``max_buckets=1`` is the classic one-padded-shape
+    dispatch).  ``backend="host"``: the NumPy reference — batched LP
+    dispatch, then per-(window, seed, trial) NumPy rounding + repair.
+    Returns ``results[b][s] = (x, A, info)``.
     """
-    stacked = stack_instances(list(insts))
-    u_cat, u_phi = offline_uniforms(stacked, seed, n_seeds, best_of)
-    if backend == "device":
-        out = offline_pipeline_device(stacked, u_cat, u_phi,
-                                      pdhg_iters=pdhg_iters,
-                                      n_seeds=n_seeds)
-        return _unstack_device(stacked, out, n_seeds)
+    insts = list(insts)
+    if backend in ("device", "sharded"):
+        from repro.scale import GridSpec, run_grid
+
+        spec = GridSpec(
+            kind="offline", insts=insts, seed=seed, n_seeds=n_seeds,
+            best_of=best_of, pdhg_iters=pdhg_iters,
+            backend="vmap" if backend == "device" else "sharded",
+            devices=devices, chunk_size=chunk_size,
+            max_buckets=max_buckets)
+        return run_grid(spec).results
     if backend != "host":
         raise ValueError(f"unknown backend {backend!r}")
+    stacked = stack_instances(insts)
+    u_cat, u_phi = offline_uniforms(stacked, seed, n_seeds, best_of)
     res = LP.solve_lp_pdhg_batched(stacked.data, iters=pdhg_iters)
     return offline_pipeline_host(stacked, res.x, res.A, u_cat, u_phi,
                                  n_seeds=n_seeds)

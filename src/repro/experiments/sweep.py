@@ -23,6 +23,11 @@ the other paper tables; run standalone with
 
     PYTHONPATH=src python -m repro.experiments.sweep            # offline
     PYTHONPATH=src python -m repro.experiments.sweep --online   # online
+
+``--shard`` partitions any of the grids across a host-device mesh via
+the ``repro.scale`` executor (run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=K``); ``--devices``
+and ``--chunk`` tune the mesh width and streaming chunk.
 """
 from __future__ import annotations
 
@@ -48,10 +53,18 @@ DEFAULT_AXES = {
 
 def run_sweep(base: MECConfig = None, axes: dict = None, window: int = 0,
               pdhg_iters: int = 4000, best_of: int = 8, seed: int = 0,
-              n_seeds: int = 1, backend: str = "device"):
+              n_seeds: int = 1, backend: str = "device",
+              devices: int = None, chunk_size: int = 0,
+              max_buckets: int = 1):
     """One CoCaR window per (grid variant × rounding seed), the whole grid
     as ONE fused device dispatch — LP, rounding, repair, trial argmax and
     window metrics all inside the jit (mirroring the ``--online`` grid).
+    ``backend="sharded"`` (the ``--shard`` flag) partitions the grid
+    across a host-device mesh via ``repro.scale`` — decision-identical,
+    just spread over ``devices`` devices in ``chunk_size`` streams.
+    ``max_buckets > 1`` opts heterogeneous grids into size-bucketed
+    padding (still decision-identical; only the reported ``lp_obj``
+    carries ~1e-14 reduction-order slack).
 
     Returns a list of row dicts (variant-major, seed-minor, in grid
     order); with ``n_seeds > 1`` each row carries its ``rounding_seed``.
@@ -62,7 +75,9 @@ def run_sweep(base: MECConfig = None, axes: dict = None, window: int = 0,
     scenarios = [Scenario(c) for c in cfgs]
     insts = [sc.instance(window, sc.empty_cache()) for sc in scenarios]
     grid = cocar_grid(insts, seed=seed, pdhg_iters=pdhg_iters,
-                      best_of=best_of, n_seeds=n_seeds, backend=backend)
+                      best_of=best_of, n_seeds=n_seeds, backend=backend,
+                      devices=devices, chunk_size=chunk_size,
+                      max_buckets=max_buckets)
     rows = []
     for cfg, per_seed in zip(cfgs, grid):
         for s, (_x, _A, info) in enumerate(per_seed):
@@ -78,7 +93,9 @@ def run_sweep(base: MECConfig = None, axes: dict = None, window: int = 0,
 def run_policy_sweep(base: MECConfig = None, axes: dict = None,
                      window: int = 0, pdhg_iters: int = 4000,
                      best_of: int = 8, seed: int = 0, n_seeds: int = 1,
-                     episodes: int = 60, backend: str = "device"):
+                     episodes: int = 60, backend: str = "device",
+                     devices: int = None, chunk_size: int = 0,
+                     max_buckets: int = 1):
     """The paper's Sec. VII-B headline comparison — CoCaR vs SPR³ /
     Greedy / Random / GatMARL — across (grid variants × rounding seeds ×
     policies), every policy's decisions AND the shared evaluation stage in
@@ -90,9 +107,8 @@ def run_policy_sweep(base: MECConfig = None, axes: dict = None,
     baseline improvement ratio.
     """
     from repro.core.baselines import spr3_relaxed
-    from repro.core.cocar import (OFFLINE_POLICIES, gat_grid_policies,
-                                  improvement_ratio, policy_grid_device,
-                                  policy_grid_host, policy_uniforms)
+    from repro.core.cocar import (gat_grid_policies, policy_grid_host,
+                                  policy_uniforms)
     from repro.core.lp import solve_lp_pdhg_batched
     from repro.mec.scenario import stack_instances
 
@@ -101,28 +117,48 @@ def run_policy_sweep(base: MECConfig = None, axes: dict = None,
     cfgs = config_grid(base, axes)
     scenarios = [Scenario(c) for c in cfgs]
     insts = [sc.instance(window, sc.empty_cache()) for sc in scenarios]
-    stacked = stack_instances(insts)
-    uniforms = policy_uniforms(stacked, seed, n_seeds, best_of)
-    gat = gat_grid_policies(stacked, seed, episodes)
 
-    if backend == "device":
-        out = policy_grid_device(stacked, seed=seed, pdhg_iters=pdhg_iters,
-                                 best_of=best_of, n_seeds=n_seeds,
-                                 uniforms=uniforms, gat=gat)
-        met = {p: out[p]["metrics"] for p in OFFLINE_POLICIES}
+    if backend in ("device", "sharded"):
+        from repro.scale import GridSpec, run_grid
+
+        res = run_grid(GridSpec(
+            kind="policy", insts=insts, seed=seed, n_seeds=n_seeds,
+            best_of=best_of, pdhg_iters=pdhg_iters, episodes=episodes,
+            backend="vmap" if backend == "device" else "sharded",
+            devices=devices, chunk_size=chunk_size,
+            max_buckets=max_buckets)).results
+        met = _policy_met(res, len(insts), n_seeds)
     elif backend == "host":
+        stacked = stack_instances(insts)
+        uniforms = policy_uniforms(stacked, seed, n_seeds, best_of)
+        gat = gat_grid_policies(stacked, seed, episodes)
         res = solve_lp_pdhg_batched(stacked.data, iters=pdhg_iters)
         relaxed = stack_instances([spr3_relaxed(i) for i in insts])
         res_s = solve_lp_pdhg_batched(relaxed.data, iters=pdhg_iters)
         host = policy_grid_host(stacked, uniforms, gat, res.x, res.A,
                                 {"x": res_s.x, "A": res_s.A},
                                 n_seeds=n_seeds)
-        met = {p: {k: np.asarray(
-            [[host[p][b][s][2][k] for s in range(n_seeds)]
-             for b in range(len(stacked))])
-            for k in host[p][0][0][2]} for p in OFFLINE_POLICIES}
+        met = _policy_met(host, len(stacked), n_seeds)
     else:
         raise ValueError(f"unknown backend {backend!r}")
+    return _policy_rows(cfgs, axes, met, n_seeds)
+
+
+def _policy_met(results, n_windows, n_seeds):
+    """``results[policy][b][s] = (x, A, metrics)`` → per-policy metric
+    arrays ``met[p][k] (B, S)``."""
+    from repro.core.cocar import OFFLINE_POLICIES
+
+    return {p: {k: np.asarray(
+        [[results[p][b][s][2][k] for s in range(n_seeds)]
+         for b in range(n_windows)])
+        for k in results[p][0][0][2]} for p in OFFLINE_POLICIES}
+
+
+def _policy_rows(cfgs, axes, met, n_seeds):
+    """Flatten per-policy metric arrays ``met[p][k] (B, S)`` into the
+    sweep's row table + headline summary."""
+    from repro.core.cocar import OFFLINE_POLICIES, improvement_ratio
 
     rows = []
     for i, cfg in enumerate(cfgs):
@@ -154,9 +190,11 @@ DEFAULT_POLICIES = ("cocar-ol", "lfu")
 
 def run_online_sweep(base: MECConfig = None, axes: dict = None,
                      traces=DEFAULT_TRACES, policies=DEFAULT_POLICIES,
-                     ocfg=None, seed: int = 0):
+                     ocfg=None, seed: int = 0, backend: str = "vmap",
+                     devices: int = None, chunk_size: int = 0):
     """Cross (config grid x trace family x policy), run everything in one
-    vmapped scan dispatch.  Returns a list of row dicts in grid order."""
+    vmapped scan dispatch (``backend="sharded"`` spreads it across a
+    host-device mesh).  Returns a list of row dicts in grid order."""
     from repro.core.online import OnlineConfig
     from repro.traces.engine import run_online_grid
     from repro.traces.registry import make_trace
@@ -173,7 +211,8 @@ def run_online_sweep(base: MECConfig = None, axes: dict = None,
                 jobs.append(dict(cfg=cfg, algo=algo, trace=trace,
                                  seed=seed))
                 keys.append((cfg, tname, algo))
-    results = run_online_grid(jobs, ocfg)
+    results = run_online_grid(jobs, ocfg, backend=backend,
+                              devices=devices, chunk_size=chunk_size)
     rows = []
     for (cfg, tname, algo), res in zip(keys, results):
         row = {k: getattr(cfg, k) for k in axes}
@@ -199,16 +238,25 @@ def format_table(rows) -> str:
 
 
 def main(online: bool = False, backend: str = "device", n_seeds: int = 1,
-         policies: bool = False):
+         policies: bool = False, devices: int = None, chunk_size: int = 0,
+         max_buckets: int = 1):
     payload = None
     if online:
-        rows, name = run_online_sweep(), "online_grid.json"
+        rows = run_online_sweep(
+            backend="sharded" if backend == "sharded" else "vmap",
+            devices=devices, chunk_size=chunk_size)
+        name = "online_grid.json"
     elif policies:
-        rows, summary = run_policy_sweep(backend=backend, n_seeds=n_seeds)
+        rows, summary = run_policy_sweep(backend=backend, n_seeds=n_seeds,
+                                         devices=devices,
+                                         chunk_size=chunk_size,
+                                         max_buckets=max_buckets)
         name = "policy_grid.json"
         payload = {"rows": rows, "summary": summary}
     else:
-        rows = run_sweep(backend=backend, n_seeds=n_seeds)
+        rows = run_sweep(backend=backend, n_seeds=n_seeds,
+                         devices=devices, chunk_size=chunk_size,
+                         max_buckets=max_buckets)
         name = "grid.json"
     print(format_table(rows))
     out = pathlib.Path("results") / "sweep"
@@ -235,9 +283,29 @@ if __name__ == "__main__":
                          "dispatch across (variants x seeds x policies)")
     ap.add_argument("--host", action="store_true",
                     help="NumPy round+repair reference loop")
+    ap.add_argument("--shard", action="store_true",
+                    help="partition the grid across a host-device mesh "
+                         "(repro.scale; run under XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=K for K "
+                         "virtual devices)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="mesh width for --shard (default: all devices)")
+    ap.add_argument("--chunk", type=int, default=0,
+                    help="streaming chunk size (0 = one chunk per bucket)")
+    ap.add_argument("--buckets", type=int, default=1,
+                    help="max size buckets for heterogeneous grids "
+                         "(1 = classic single padded shape)")
     ap.add_argument("--seeds", type=int, default=1,
                     help="rounding seeds per variant (offline only)")
     args = ap.parse_args()
+    if args.host and args.shard:
+        ap.error("--host and --shard are mutually exclusive")
+    if args.devices is not None and not args.shard:
+        ap.error("--devices requires --shard (a plain run would "
+                 "silently ignore it)")
     main(online=args.online,
-         backend="host" if args.host else "device",
-         n_seeds=args.seeds, policies=args.policies)
+         backend=("host" if args.host
+                  else "sharded" if args.shard else "device"),
+         n_seeds=args.seeds, policies=args.policies,
+         devices=args.devices, chunk_size=args.chunk,
+         max_buckets=args.buckets)

@@ -30,10 +30,22 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(*, data: int = 1, model: int = 1):
-    """Small mesh over whatever devices exist (CPU tests)."""
+    """Small ("data", "model") mesh for host-device runs (CPU tests, the
+    ``repro.scale`` grid executor).  Validates the device count up front:
+    a short mesh would otherwise surface as an inscrutable reshape or
+    shard_map error far from the cause."""
     import numpy as np
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be >= 1, got ({data}, {model})")
     n = data * model
-    dev = np.asarray(jax.devices()[:n]).reshape((data, model))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh ({data}, {model}) needs {n} devices, but only "
+            f"{len(devices)} exist — set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} before the first "
+            "jax import (see benchmarks/bench_scale.py), or shrink the mesh")
+    dev = np.asarray(devices[:n]).reshape((data, model))
     return jax.sharding.Mesh(dev, ("data", "model"))
 
 

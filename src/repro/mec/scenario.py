@@ -172,6 +172,19 @@ class StackedWindows:
     def __len__(self):
         return len(self.n_bs)
 
+    @property
+    def signature(self):
+        """Stable, hashable shape key ``(B, N_pad, U_pad, M, H)``.
+
+        Two stacks with the same signature trace to the same jitted
+        executables — the static bucket key the ``repro.scale`` executor
+        (and any caller managing its own jit cache) keys on, instead of
+        re-deriving shapes from the pytree per call.
+        """
+        B, N, U, H = self.data.T.shape
+        M = self.data.sizes.shape[1]
+        return (int(B), int(N), int(U), int(M), int(H))
+
     def unstack(self, x, A):
         """Slice padded batch solutions (B,N,M,H+1), (B,N,U,H) back into
         per-instance (x_i, A_i) at their true shapes."""
@@ -181,7 +194,7 @@ class StackedWindows:
         return out
 
 
-def stack_instances(insts: list) -> StackedWindows:
+def stack_instances(insts: list, pad_to: tuple = None) -> StackedWindows:
     """Pad + stack JDCR windows into one PDHGData batch.
 
     All instances must share the catalog shape (M, H).  N and U may differ:
@@ -191,6 +204,11 @@ def stack_instances(insts: list) -> StackedWindows:
     toward them, and A <= x pins them at 0).  All pads are zeros, so the
     real rows see the same preconditioner sums and the same per-iteration
     updates as a solo solve of their own instance.
+
+    ``pad_to=(N_pad, U_pad)`` pads to an explicit shape instead of the
+    stack's own max — how the ``repro.scale`` executor pins every stack
+    of a size bucket to the bucket's one compiled shape.  Since pads are
+    exactly inert, the padding target never changes real rows' results.
     """
     from repro.core.lp import PDHGData, pdhg_data
 
@@ -204,6 +222,13 @@ def stack_instances(insts: list) -> StackedWindows:
                 f"({M},{H}); stack only varies N/U")
     N_max = max(inst.N for inst in insts)
     U_max = max(inst.U for inst in insts)
+    if pad_to is not None:
+        pN, pU = int(pad_to[0]), int(pad_to[1])
+        if pN < N_max or pU < U_max:
+            raise ValueError(
+                f"pad_to {pad_to} smaller than the stack's own max "
+                f"({N_max}, {U_max})")
+        N_max, U_max = pN, pU
 
     fields = {k: [] for k in PDHGData._fields}
     for inst in insts:

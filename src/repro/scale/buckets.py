@@ -1,0 +1,117 @@
+"""Size-bucketed batch planning for heterogeneous scenario grids.
+
+``stack_instances`` pads every window in a grid to the global max (N, U)
+— one compiled shape, but on a wide grid (4-BS windows next to 12-BS
+ones, 40-user windows next to 600-user ones) most of the batch is
+padding, and the padded FLOPs are real FLOPs.  The other extreme — one
+compile per distinct shape — trades the padding waste for compile churn.
+
+``plan_buckets`` sits between the two: it groups the grid's (N, U)
+shapes into at most ``max_buckets`` buckets, each padded to its members'
+max, merging the shapes whose union wastes the fewest padded cells.
+Correctness does not depend on the grouping at all — padded base
+stations and users are exactly inert in every kernel (``bs_mask``, zero
+``onehot_mu`` rows; see ``repro.core.lp``), so any plan reproduces the
+max-padded stack's decisions bit-identically at the true shapes
+(asserted in ``tests/test_scale.py``).  The plan only moves the
+compile-count / padding-waste trade-off.
+
+``BucketPlan.key`` is a stable, hashable signature of the padded shapes:
+two sweeps whose grids bucket to the same key dispatch through the same
+compiled executables (``repro.scale.executor`` keys its compiled-fn
+cache on it), so repeated sweeps retrace nothing.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Bucket:
+    """One padded shape and the grid indices stacked into it."""
+    n_bs: int                    # padded N of this bucket
+    n_users: int                 # padded U of this bucket
+    indices: tuple               # original grid indices, ascending
+
+    @property
+    def key(self):
+        return (self.n_bs, self.n_users)
+
+    def __len__(self):
+        return len(self.indices)
+
+
+@dataclass(frozen=True)
+class BucketPlan:
+    buckets: tuple               # of Bucket, disjoint cover of the grid
+
+    @property
+    def key(self):
+        """Stable jit-cache signature: padded shape + population per
+        bucket.  Grids that plan to the same key hit the same compiled
+        executables."""
+        return tuple((b.n_bs, b.n_users, len(b.indices))
+                     for b in self.buckets)
+
+    def __len__(self):
+        return len(self.buckets)
+
+    def padded_cells(self) -> int:
+        """Total (N_pad · U_pad) cells the plan dispatches — the padding
+        cost the planner minimizes."""
+        return sum(b.n_bs * b.n_users * len(b.indices)
+                   for b in self.buckets)
+
+
+def _round_up(v: int, quantum: int) -> int:
+    return -(-v // max(quantum, 1)) * max(quantum, 1)
+
+
+def plan_buckets(shapes, max_buckets: int = 4,
+                 round_users_to: int = 1) -> BucketPlan:
+    """Group grid shapes into at most ``max_buckets`` padded buckets.
+
+    ``shapes`` is the grid's per-instance (N, U) list, in grid order.
+    Greedy agglomeration: start from one bucket per distinct shape
+    (sorted), then repeatedly merge the adjacent pair whose union adds
+    the fewest padded cells, until the bucket count fits.  With
+    ``max_buckets=1`` this degenerates to today's global max-padding;
+    with ``max_buckets >= n_distinct_shapes`` every shape keeps its own
+    exactly-fitting bucket.
+
+    ``round_users_to`` rounds each bucket's padded U up to a multiple, so
+    nearby grids (e.g. 150 vs 152 users) share compiled shapes across
+    sweeps at a small padding cost.
+    """
+    if max_buckets < 1:
+        raise ValueError(f"max_buckets must be >= 1, got {max_buckets}")
+    if not shapes:
+        raise ValueError("plan_buckets needs at least one shape")
+    by_shape = {}
+    for i, (n, u) in enumerate(shapes):
+        by_shape.setdefault((int(n), int(u)), []).append(i)
+
+    # [[N_pad, U_pad, indices]], kept sorted by shape so merges are
+    # deterministic and "adjacent" shapes are actually similar
+    cells = [[n, u, idx] for (n, u), idx in sorted(by_shape.items())]
+
+    def merge(a, b):
+        return [max(a[0], b[0]), max(a[1], b[1]), a[2] + b[2]]
+
+    def cost(c):
+        return c[0] * c[1] * len(c[2])
+
+    while len(cells) > max_buckets:
+        best, best_waste = None, None
+        for j in range(len(cells) - 1):
+            a, b = cells[j], cells[j + 1]
+            waste = cost(merge(a, b)) - cost(a) - cost(b)
+            if best_waste is None or waste < best_waste:
+                best, best_waste = j, waste
+        cells[best:best + 2] = [merge(cells[best], cells[best + 1])]
+
+    buckets = tuple(
+        Bucket(n_bs=c[0], n_users=_round_up(c[1], round_users_to),
+               indices=tuple(sorted(c[2])))
+        for c in cells)
+    return BucketPlan(buckets=buckets)

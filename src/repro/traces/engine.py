@@ -414,13 +414,12 @@ def _scan_run(p, st0, counts, ns, u_model, perms, u_shrink, policy):
 
 
 @functools.cache
-def _compiled(batched: bool):
+def _compiled():
+    """The single-scenario scan (``run_scan``).  Grid runs go through the
+    ``repro.scale`` executor, which jits its own vmapped ``_scan_run``."""
     import jax
 
-    fn = _scan_run
-    if batched:
-        fn = jax.vmap(fn)
-    return jax.jit(fn)
+    return jax.jit(_scan_run)
 
 
 def _policy_id(algo: str) -> int:
@@ -439,7 +438,7 @@ def run_scan(params: OnlineParams, counts, stream: DecisionStream,
 
     st0 = init_state(params, dT_past)
     with enable_x64():
-        stF, qoe, hits = _compiled(False)(
+        stF, qoe, hits = _compiled()(
             params, st0, np.asarray(counts, np.float64),
             stream.adjust_ns, stream.u_model, stream.perms, stream.u_shrink,
             _policy_id(algo))
@@ -472,63 +471,53 @@ def run_online_scan(cfg, ocfg, algo: str = "cocar-ol", seed: int = 0,
     return run_scan(params, counts, stream, algo, dT_past=ocfg.dT_past)
 
 
-def run_online_grid(jobs, ocfg):
-    """Run many (cfg, trace, algo, seed) scenarios in ONE vmapped dispatch.
+def grid_payloads(jobs, ocfg):
+    """Per-job engine arrays for a grid run: the (params, counts, stream,
+    policy id, request total) each scan consumes, derived exactly as
+    ``run_online`` derives them (same default seeds and streams).
 
-    ``jobs`` is a list of dicts with keys ``cfg`` (MECConfig), ``algo``
-    (policy name), and optionally ``trace`` (a Trace; default workload
-    otherwise) and ``seed``.  All cfgs must share (n_bs, n_models) — vary
-    capacities/rates/zipf/traces/policies/seeds freely.  Returns one
-    summary dict per job, in order.
+    This is the online grid's ingestion stage; the ``repro.scale``
+    executor buckets the payloads by shape, stacks each bucket, and
+    dispatches them sharded/chunked.
     """
     from dataclasses import replace
 
-    from jax.experimental import enable_x64
-
     from repro.traces.registry import default_trace
 
-    if not jobs:
-        return []
-    shapes = {(j["cfg"].n_bs, j["cfg"].n_models) for j in jobs}
-    if len(shapes) > 1:
-        raise ValueError(f"online grid needs uniform (n_bs, n_models); "
-                         f"got {sorted(shapes)}")
-    ps, c0s, sts, pols, totals = [], [], [], [], []
+    payloads = []
     for j in jobs:
         seed = j.get("seed", 0)        # same default as run_online
         cfg = replace(j["cfg"], seed=seed)
         trace = j.get("trace") or default_trace(cfg, ocfg)
         check_trace(trace, cfg, ocfg)
         stream = j.get("stream") or default_stream(cfg, ocfg, seed)
-        ps.append(make_params(cfg, ocfg))
         counts = trace.counts(cfg.n_bs, cfg.n_models)
-        c0s.append(counts)
-        sts.append(stream)
-        pols.append(_policy_id(j["algo"]))
-        totals.append(counts.sum())
-    params = OnlineParams(*(np.stack([getattr(p, f) for p in ps])
-                            for f in OnlineParams._fields))
-    st0 = init_state(ps[0], ocfg.dT_past)
-    st0 = OnlineState(*(np.broadcast_to(x, (len(jobs),) + x.shape)
-                        for x in st0))
-    counts = np.stack(c0s)
-    with enable_x64():
-        stF, qoe, hits = _compiled(True)(
-            params, st0, counts,
-            np.stack([s.adjust_ns for s in sts]),
-            np.stack([s.u_model for s in sts]),
-            np.stack([s.perms for s in sts]),
-            np.stack([s.u_shrink for s in sts]),
-            np.asarray(pols))
-    qoe, hits = np.asarray(qoe), np.asarray(hits)
-    out = []
-    for i, j in enumerate(jobs):
-        tot = max(totals[i], 1.0)
-        out.append({
-            "avg_qoe": float(qoe[i].sum()) / tot,
-            "hit_rate": float(hits[i].sum()) / tot,
-            "slot_qoe": qoe[i],
-            "slot_hits": hits[i],
-            "final_state": OnlineState(*(np.asarray(x[i]) for x in stF)),
+        payloads.append({
+            "params": make_params(cfg, ocfg),
+            "counts": counts,
+            "stream": stream,
+            "policy": _policy_id(j["algo"]),
+            "total": float(counts.sum()),
         })
-    return out
+    return payloads
+
+
+def run_online_grid(jobs, ocfg, backend: str = "vmap",
+                    devices: int = None, chunk_size: int = 0):
+    """Run many (cfg, trace, algo, seed) scenarios in one vmapped scan
+    dispatch per shape bucket, via the ``repro.scale`` grid executor.
+
+    ``jobs`` is a list of dicts with keys ``cfg`` (MECConfig), ``algo``
+    (policy name), and optionally ``trace`` (a Trace; default workload
+    otherwise) and ``seed``.  Heterogeneous (n_bs, n_models, n_slots)
+    grids are bucketed by shape — each bucket is one dispatch.
+    ``backend="sharded"`` partitions every bucket's batch across a
+    ``devices``-wide host mesh; ``chunk_size`` streams it in bounded
+    chunks.  Returns one summary dict per job, in order.
+    """
+    from repro.scale import GridSpec, run_grid
+
+    spec = GridSpec(kind="online", jobs=list(jobs), ocfg=ocfg,
+                    backend=backend, devices=devices,
+                    chunk_size=chunk_size)
+    return run_grid(spec).results

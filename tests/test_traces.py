@@ -186,11 +186,22 @@ def test_grid_matches_single_runs():
                                       np.argmax(sim.X, -1))
 
 
-def test_grid_rejects_mixed_shapes():
-    jobs = [dict(cfg=CFG, algo="lfu"),
-            dict(cfg=MECConfig(n_bs=4, n_users=60), algo="lfu")]
-    with pytest.raises(ValueError):
-        E.run_online_grid(jobs, OCFG)
+def test_grid_mixed_shapes_bucketed():
+    """Mixed (n_bs, n_models) grids — rejected before the scale executor
+    — are now bucketed by shape, and every job still reproduces its solo
+    scan run bit-exactly."""
+    cfg2 = MECConfig(n_bs=4, n_users=60, n_models=M, seed=3)
+    jobs = [dict(cfg=CFG, algo="lfu", trace=STAT_TRACE, stream=STREAM),
+            dict(cfg=cfg2, algo="lfu", seed=3)]
+    grid = E.run_online_grid(jobs, OCFG)
+    assert len(grid) == 2
+    solo0 = E.run_online_scan(CFG, OCFG, "lfu", trace=STAT_TRACE,
+                              stream=STREAM)
+    solo1 = E.run_online_scan(cfg2, OCFG, "lfu", seed=3)
+    np.testing.assert_array_equal(grid[0]["slot_qoe"], solo0["slot_qoe"])
+    np.testing.assert_array_equal(grid[1]["slot_qoe"], solo1["slot_qoe"])
+    np.testing.assert_array_equal(grid[1]["final_state"].lvl,
+                                  solo1["final_state"].lvl)
 
 
 def test_online_sweep_rows():
