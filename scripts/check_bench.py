@@ -80,6 +80,21 @@ MANIFEST = {
                         "comparison.n_users", "comparison.best_of",
                         "comparison.pdhg_iters", "comparison.episodes"],
     },
+    "BENCH_lp.json": {
+        "scale": ["step.iters", "step.n_users_max", "grid.variants",
+                  "grid.n_users", "grid.pdhg_iters"],
+        "ratios": ["step.fused_speedup_u1000", "solve.fused_speedup",
+                   "grid.grid_speedup"],
+        "gaps": ["grid.decision_gap"],
+        # the fused LP backend's contract: >= 3x reference step time at
+        # U=1000 (target_3x_met; the bench itself asserts it), identical
+        # offline-grid decisions, and the per-comparison threshold-shift
+        # certificate that *implies* the identity (margin_certified) —
+        # the CI smoke produces the grid flags; the step flag exists on
+        # full-scale runs
+        "flags": ["step.target_3x_met", "grid.decisions_identical",
+                  "grid.margin_certified"],
+    },
     "BENCH_scale.json": {
         "scale": ["throughput.variants", "throughput.n_seeds",
                   "throughput.n_users", "throughput.pdhg_iters",

@@ -36,6 +36,13 @@ JAX_ENABLE_X64=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.bench_offline --smoke
 JAX_ENABLE_X64=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.bench_baselines --smoke
+# the fused LP backend's conformance smoke: lp_backend="pallas" must
+# reproduce the reference backend's offline-grid decisions bit-exactly,
+# with the per-comparison threshold-shift certificate holding.  No
+# JAX_ENABLE_X64 here: the bench scopes x64 internally per block, the
+# same way the production pipeline does.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.bench_lp --smoke
 # the sharded grid executor under a forced 8-device host mesh: shard_map
 # + bucketed batching + chunk streaming must reproduce the one-device
 # dispatch's decisions exactly (the flag is also set inside bench_scale

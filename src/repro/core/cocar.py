@@ -68,15 +68,18 @@ def cocar_window(inst: JDCRInstance, seed: int = 0, solver: str = "scipy",
 # the fused offline pipeline (one dispatch over windows × seeds × trials)
 # ---------------------------------------------------------------------------
 
-def _pipeline_kernel(data, u_cat, u_phi, iters, n_seeds):
+def _pipeline_kernel(data, u_cat, u_phi, iters, n_seeds,
+                     backend: str = "reference"):
     """One padded window through LP → round → repair → argmax → metrics,
     entirely in jnp.  ``u_cat (S·T, N, M)`` / ``u_phi (S·T, N, U, H)``
     carry ``n_seeds`` independent rounding seeds of ``best_of`` trials
-    each; the best trial *per seed* is selected on device."""
+    each; the best trial *per seed* is selected on device.  ``backend``
+    picks the LP solver ("reference" or "pallas", see
+    ``repro.core.lp.LP_BACKENDS``) — decisions are identical either way."""
     import jax
     import jax.numpy as jnp
 
-    x_f, A_f = LP._pdhg_kernel(data, iters)
+    x_f, A_f = LP._lp_solve_kernel(data, iters, backend)
     x_r, A_r = round_from_uniforms(x_f, A_f, data.onehot_mu, u_cat, u_phi)
     x_p, A_p = jax.vmap(repair_device, in_axes=(None, 0, 0))(data, x_r, A_r)
     objs = jax.vmap(lambda a: objective_sel(data.prec_u, a))(A_p)
@@ -94,9 +97,10 @@ def _pipeline_kernel(data, u_cat, u_phi, iters, n_seeds):
 
 
 @functools.cache
-def _pipeline_jitted():
+def _pipeline_jitted(backend: str = "reference"):
     import jax
-    fn = jax.vmap(_pipeline_kernel, in_axes=(0, 0, 0, None, None))
+    fn = jax.vmap(functools.partial(_pipeline_kernel, backend=backend),
+                  in_axes=(0, 0, 0, None, None))
     return jax.jit(fn, static_argnums=(3, 4))
 
 
@@ -112,7 +116,8 @@ def offline_uniforms(stacked: StackedWindows, seed: int, n_seeds: int,
 
 
 def offline_pipeline_device(stacked: StackedWindows, u_cat, u_phi,
-                            pdhg_iters: int = 4000, n_seeds: int = 1):
+                            pdhg_iters: int = 4000, n_seeds: int = 1,
+                            lp_backend: str = "reference"):
     """The whole offline grid in ONE jitted/vmapped f64 dispatch.
 
     Returns a dict of padded numpy arrays: fractional solutions
@@ -124,8 +129,8 @@ def offline_pipeline_device(stacked: StackedWindows, u_cat, u_phi,
     from jax.experimental import enable_x64
 
     with enable_x64():
-        out = _pipeline_jitted()(stacked.data, u_cat, u_phi,
-                                 int(pdhg_iters), int(n_seeds))
+        out = _pipeline_jitted(lp_backend)(stacked.data, u_cat, u_phi,
+                                           int(pdhg_iters), int(n_seeds))
     return {k: ({kk: np.asarray(vv) for kk, vv in v.items()}
                 if isinstance(v, dict) else np.asarray(v))
             for k, v in out.items()}
@@ -190,7 +195,8 @@ def _eval_policy(data, x, A):
 
 
 def _policy_kernel(data, u_cat, u_phi, u_cat_s, u_phi_s, u_perm, u_h,
-                   u_route, gat_params, gat_feats, gat_adj, iters, n_seeds):
+                   u_route, gat_params, gat_feats, gat_adj, iters, n_seeds,
+                   backend: str = "reference"):
     """One padded window through ALL five policies, entirely in jnp.
 
     CoCaR runs the fused LP → round → repair → argmax pipeline
@@ -211,13 +217,14 @@ def _policy_kernel(data, u_cat, u_phi, u_cat_s, u_phi_s, u_perm, u_h,
     # repaired CoCaR solutions already satisfy the execution-time checks
     # (enforce is an identity post-repair, asserted in
     # tests/test_offline_batched.py), so the pipeline's own metrics stand
-    coc = _pipeline_kernel(data, u_cat, u_phi, iters, n_seeds)
+    coc = _pipeline_kernel(data, u_cat, u_phi, iters, n_seeds,
+                           backend=backend)
     out["cocar"] = {"x": coc["x"], "A": coc["A"], "metrics": coc["metrics"]}
     out["lp_obj"] = coc["lp_obj"]
     out["cocar_frac"] = {"x": coc["x_frac"], "A": coc["A_frac"]}
 
     relaxed = BL.spr3_relax_device(data)
-    xs_f, As_f = LP._pdhg_kernel(relaxed, iters)
+    xs_f, As_f = LP._lp_solve_kernel(relaxed, iters, backend)
     xs_r, As_r = round_from_uniforms(xs_f, As_f, relaxed.onehot_mu,
                                      u_cat_s, u_phi_s)
     xs, As = jax.vmap(repair_device, in_axes=(None, 0, 0))(relaxed,
@@ -247,9 +254,10 @@ def _policy_kernel(data, u_cat, u_phi, u_cat_s, u_phi_s, u_perm, u_h,
 
 
 @functools.cache
-def _policy_jitted():
+def _policy_jitted(backend: str = "reference"):
     import jax
-    fn = jax.vmap(_policy_kernel, in_axes=(0,) * 11 + (None, None))
+    fn = jax.vmap(functools.partial(_policy_kernel, backend=backend),
+                  in_axes=(0,) * 11 + (None, None))
     return jax.jit(fn, static_argnums=(11, 12))
 
 
@@ -310,7 +318,8 @@ def gat_grid_policies(stacked: StackedWindows, seed: int = 0,
 def policy_grid_device(stacked: StackedWindows, seed: int = 0,
                        pdhg_iters: int = 4000, best_of: int = 8,
                        n_seeds: int = 1, episodes: int = 150,
-                       uniforms=None, gat=None):
+                       uniforms=None, gat=None,
+                       lp_backend: str = "reference"):
     """CoCaR + the four baselines over (windows × seeds) in ONE jitted/
     vmapped f64 dispatch (GatMARL training excepted — host-side, cached).
 
@@ -326,9 +335,9 @@ def policy_grid_device(stacked: StackedWindows, seed: int = 0,
         gat_grid_policies(stacked, seed, episodes)
     gat_params, gat_feats, gat_adj = gat
     with enable_x64():
-        out = _policy_jitted()(stacked.data, *uniforms, gat_params,
-                               gat_feats, gat_adj, int(pdhg_iters),
-                               int(n_seeds))
+        out = _policy_jitted(lp_backend)(stacked.data, *uniforms, gat_params,
+                                         gat_feats, gat_adj, int(pdhg_iters),
+                                         int(n_seeds))
 
     def to_np(tree):
         if isinstance(tree, dict):
@@ -424,7 +433,7 @@ def _unstack_device(stacked: StackedWindows, out, n_seeds: int):
 def cocar_grid(insts, seed: int = 0, pdhg_iters: int = 4000,
                best_of: int = 8, n_seeds: int = 1, backend: str = "device",
                devices: int = None, chunk_size: int = 0,
-               max_buckets: int = 1):
+               max_buckets: int = 1, lp_backend: str = "reference"):
     """CoCaR over a grid of independent windows × rounding seeds.
 
     ``backend="device"``: the fused LP → rounding → repair → metrics
@@ -436,6 +445,8 @@ def cocar_grid(insts, seed: int = 0, pdhg_iters: int = 4000,
     count (the default ``max_buckets=1`` is the classic one-padded-shape
     dispatch).  ``backend="host"``: the NumPy reference — batched LP
     dispatch, then per-(window, seed, trial) NumPy rounding + repair.
+    ``lp_backend`` independently picks the window LP solver ("reference"
+    or "pallas" — the fused mixed-precision kernel, decision-identical).
     Returns ``results[b][s] = (x, A, info)``.
     """
     insts = list(insts)
@@ -447,19 +458,21 @@ def cocar_grid(insts, seed: int = 0, pdhg_iters: int = 4000,
             best_of=best_of, pdhg_iters=pdhg_iters,
             backend="vmap" if backend == "device" else "sharded",
             devices=devices, chunk_size=chunk_size,
-            max_buckets=max_buckets)
+            max_buckets=max_buckets, lp_backend=lp_backend)
         return run_grid(spec).results
     if backend != "host":
         raise ValueError(f"unknown backend {backend!r}")
     stacked = stack_instances(insts)
     u_cat, u_phi = offline_uniforms(stacked, seed, n_seeds, best_of)
-    res = LP.solve_lp_pdhg_batched(stacked.data, iters=pdhg_iters)
+    res = LP.solve_lp_pdhg_batched(stacked.data, iters=pdhg_iters,
+                                   backend=lp_backend)
     return offline_pipeline_host(stacked, res.x, res.A, u_cat, u_phi,
                                  n_seeds=n_seeds)
 
 
 def cocar_windows_batched(insts, seed: int = 0, pdhg_iters: int = 4000,
-                          best_of: int = 8, backend: str = "device"):
+                          best_of: int = 8, backend: str = "device",
+                          lp_backend: str = "reference"):
     """CoCaR over a stack of independent windows (scenario-grid variants,
     seeds, parallel traces) — one rounding seed per window, aligned with
     ``insts``.  Returns a list of (x, A, info) triples.
@@ -468,7 +481,8 @@ def cocar_windows_batched(insts, seed: int = 0, pdhg_iters: int = 4000,
     but must share the catalog shape (M, H).
     """
     grid = cocar_grid(insts, seed=seed, pdhg_iters=pdhg_iters,
-                      best_of=best_of, n_seeds=1, backend=backend)
+                      best_of=best_of, n_seeds=1, backend=backend,
+                      lp_backend=lp_backend)
     return [per_seed[0] for per_seed in grid]
 
 

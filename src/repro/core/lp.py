@@ -25,6 +25,7 @@ Both backends return fractional (x†, A†) with x (N,M,H+1) and A (N,U,H).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import NamedTuple
 
@@ -259,16 +260,37 @@ def _pdhg_kernel(data: PDHGData, iters: int):
     return x, A
 
 
+#: LP solver backends: "reference" is the plain f64 kernel above;
+#: "pallas" is the fused mixed-precision path (repro.kernels.pdhg_fused
+#: — the Pallas engine on TPU, its lax.scan realization elsewhere).
+LP_BACKENDS = ("reference", "pallas")
+
+
+def _lp_solve_kernel(data, iters: int, backend: str = "reference"):
+    """Traceable (x, A) window solve dispatching on ``backend``.  Both
+    backends return float64 x (N,M,H+1) / A (N,U,H); "pallas" produces
+    fractionals within rounding-margin of the reference, so downstream
+    decisions (rounding, repair, winning trials) are identical — the
+    contract tests/test_pdhg_fused.py enforces."""
+    if backend == "reference":
+        return _pdhg_kernel(data, iters)
+    if backend == "pallas":
+        from repro.kernels.pdhg_fused import pdhg_fused
+        return pdhg_fused(data, iters)
+    raise ValueError(f"unknown LP backend {backend!r}; one of {LP_BACKENDS}")
+
+
 _JIT_CACHE = {}
 
 
-def _jitted_kernel(batched: bool):
-    """Module-level jit cache: one compile per (batched, shape, iters) —
-    repeat calls at the same shapes (e.g. window loops) skip tracing."""
-    key = ("batched" if batched else "single")
+def _jitted_kernel(batched: bool, backend: str = "reference"):
+    """Module-level jit cache: one compile per (batched, backend, shape,
+    iters) — repeat calls at the same shapes (e.g. window loops) skip
+    tracing."""
+    key = ("batched" if batched else "single", backend)
     if key not in _JIT_CACHE:
         import jax
-        fn = _pdhg_kernel
+        fn = functools.partial(_lp_solve_kernel, backend=backend)
         if batched:
             fn = jax.vmap(fn, in_axes=(0, None))
         _JIT_CACHE[key] = jax.jit(fn, static_argnums=(1,))
@@ -299,8 +321,8 @@ class BatchedPDHGResult:
 
 
 def solve_lp_pdhg(inst: JDCRInstance, iters: int = 4000, check_every: int = 200,
-                  tol: float = 2e-3):
-    x, A = _jitted_kernel(batched=False)(pdhg_data(inst), iters)
+                  tol: float = 2e-3, backend: str = "reference"):
+    x, A = _jitted_kernel(batched=False, backend=backend)(pdhg_data(inst), iters)
     x = np.asarray(x)
     A = np.asarray(A)
     obj = inst.objective(A)
@@ -312,7 +334,8 @@ def solve_lp_pdhg(inst: JDCRInstance, iters: int = 4000, check_every: int = 200,
                       primal_res=float(max(primal, 0.0)), dual_res=0.0)
 
 
-def solve_lp_pdhg_batched(data: PDHGData, iters: int = 4000) -> BatchedPDHGResult:
+def solve_lp_pdhg_batched(data: PDHGData, iters: int = 4000,
+                          backend: str = "reference") -> BatchedPDHGResult:
     """Solve a whole stack of windows in ONE vmapped, jitted dispatch.
 
     ``data`` is a :class:`PDHGData` whose every field carries a leading
@@ -321,7 +344,7 @@ def solve_lp_pdhg_batched(data: PDHGData, iters: int = 4000) -> BatchedPDHGResul
     base stations hold A == 0 throughout (``bs_mask``), so padding
     contributes nothing to the einsum.
     """
-    x, A = _jitted_kernel(batched=True)(data, iters)
+    x, A = _jitted_kernel(batched=True, backend=backend)(data, iters)
     x = np.asarray(x)
     A = np.asarray(A)
     objs = np.einsum("bnuh,buh->b", A, np.asarray(data.prec_u))

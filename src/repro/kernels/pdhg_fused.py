@@ -1,0 +1,382 @@
+"""Fused PDHG inner loop for the P1-LR window solver.
+
+``repro.core.lp._pdhg_kernel`` — the bit-compared reference — materializes
+the full primal/dual state through HBM every iteration: four dense one-hot
+einsums, separate strided reductions per dual family, and a dozen
+elementwise passes.  This module is the fused production path behind
+``solve_lp_pdhg(..., backend="pallas")``:
+
+  * **one step, restructured** (``_fused_step``): the cache↔route coupling
+    ``x_a`` and its transpose each become a single real GEMM against the
+    one-hot user→model matrix (bit-identical to the reference's gather —
+    one-hot rows contract exactly one term per output), the three per-user
+    dual reductions run contiguously over a ``(U, N·H)`` relayout, and the
+    routing prox folds ``tau_A`` into precomputed ``tau_A·T`` / ``tau_A·L``
+    tensors — the same Chambolle–Pock math (docs/algorithms.md Sec. 3),
+    ~3x fewer memory passes;
+  * **two engines over the same step**: ``engine="scan"`` wraps the step
+    in ``lax.scan`` (the XLA path CPU CI measures), ``engine="pallas"``
+    keeps the whole state resident in VMEM scratch across a *block* of
+    iterations per grid step (``ssm_scan``-style sequential grid), so the
+    primal/dual tensors never round-trip HBM between iterations.  Both
+    engines execute the identical jnp expressions on the identical state
+    layout; what separates them is only XLA's per-compilation FMA
+    contraction, so interpret-mode Pallas agrees with the scan engine to
+    ≤1e-12 in pure f64 and to f32-ulp noise (~1e-7) through the mixed
+    sweep — and the *decisions* derived from either are bit-identical,
+    the conformance contract ``tests/test_pdhg_fused.py`` enforces;
+  * **mixed precision** (``polish``): the inner sweep runs in float32,
+    then the last ``polish`` iterations re-run the same fused step in
+    float64 on the carried state.  Decisions downstream (rounding, repair,
+    winning trials) are gated on ~1e-15-scale comparisons of *uniforms vs
+    thresholds*; the fused path preserves them because (a) the float64
+    tail pins every saturated coordinate back to the exact 0/1 the
+    reference reaches, and (b) the residual fractional gap is orders of
+    magnitude below the rounding-threshold margins, which
+    ``tests/harness.py::decision_margin`` certifies per run.
+
+Padding is *stronger* than the reference's inertness: ``tau_A`` carries
+both the ``bs_mask`` row mask and a per-user column mask (users with an
+all-zero ``onehot_mu`` row), so padded base-station rows AND padded user
+columns of ``A`` stay exactly 0.0 through both precision phases.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+#: float64 polish-tail length (iterations) of the mixed-precision schedule.
+POLISH_TAIL = 64
+
+#: iterations per Pallas grid step (state stays in VMEM within a block).
+PALLAS_BLOCK = 8
+
+
+def _f(v, dtype):
+    import jax.numpy as jnp
+
+    return jnp.asarray(v, dtype)
+
+
+def _constants(data, dtype):
+    """Precomputed step-size / operator tensors in the fused (N, H, U)
+    layout, all cast to ``dtype``.  Pure function of the PDHGData pytree;
+    shared verbatim by the scan and Pallas engines."""
+    import jax.numpy as jnp
+
+    sizes = _f(data.sizes, dtype)                      # (M, H+1)
+    onehot_mu = _f(data.onehot_mu, dtype)              # (U, M)
+    R = _f(data.R, dtype)
+    ddl = _f(data.ddl, dtype)
+    s_u = _f(data.s_u, dtype)
+    bs_mask = _f(data.bs_mask, dtype)
+    T = jnp.swapaxes(_f(data.T, dtype), 1, 2)          # (N, H, U)
+    L = jnp.swapaxes(_f(data.L, dtype), 1, 2)
+    prec_hu = jnp.swapaxes(_f(data.prec_u, dtype), 0, 1)   # (H, U)
+    N, H, U = T.shape
+    M = sizes.shape[0]
+    NH = N * H
+
+    u_mask = onehot_mu.sum(-1)                         # 0.0 on padded users
+    T_t = T.reshape(NH, U).T                           # (U, NH) contiguous
+    L_t = L.reshape(NH, U).T
+
+    # Pock–Chambolle diagonal step sizes (alpha = 1), exactly the
+    # reference's row/column sums
+    sig_eq = jnp.full((N, M), 1.0, dtype) / jnp.maximum(
+        jnp.full((N, M), float(H + 1), dtype), 1e-9)
+    sig_mem = 1.0 / jnp.maximum(jnp.ones((N,), dtype) * sizes.sum(), 1e-9)
+    sig_route = 1.0 / jnp.maximum(
+        jnp.ones((U,), dtype) * bs_mask.sum() * H, 1e-9)
+    sig_lat = 1.0 / jnp.maximum(T.sum(axis=(0, 1)), 1e-9)
+    sig_load = 1.0 / jnp.maximum(L.sum(axis=(0, 1)), 1e-9)
+    sig_ax = 0.5  # Python float: weak-typed, exact in both precisions
+
+    cx = jnp.ones((N, M, H + 1), dtype) + sizes[None]
+    cx = cx.at[:, :, 1:].add(onehot_mu.sum(0)[None, :, None])
+    tau_x = 1.0 / jnp.maximum(cx, 1e-9)
+    # row mask (padded BSs) AND column mask (padded users): masked entries
+    # get a zero step, so A stays exactly 0.0 there for the whole solve
+    tau_A = (bs_mask[:, None, None] * u_mask[None, None, :]) \
+        / jnp.maximum(2.0 + T + L, 1e-9)
+    tau_prec = tau_A * prec_hu[None]                   # objective gradient
+    tAT = tau_A * T                                    # folded prox tensors
+    tAL = tau_A * L
+
+    return dict(sizes=sizes, onehot_mu=onehot_mu, R=R, ddl=ddl, s_u=s_u,
+                T=T, L=L, T_t=T_t, L_t=L_t,
+                sig_eq=sig_eq, sig_mem=sig_mem, sig_route=sig_route,
+                sig_lat=sig_lat, sig_load=sig_load, sig_ax=sig_ax,
+                tau_x=tau_x, tau_A=tau_A, tau_prec=tau_prec,
+                tAT=tAT, tAL=tAL, dims=(N, M, H, U))
+
+
+def _apply_K(c, x, A):
+    """The forward operator K in the fused layout: per-family residuals
+    of (x (N,M,H+1), A (N,H,U))."""
+    import jax
+    import jax.numpy as jnp
+
+    N, M, H, U = c["dims"]
+    y_eq = x.sum(-1) - 1.0                                       # (N, M)
+    y_mem = (x * c["sizes"][None]).sum((-2, -1)) - c["R"]        # (N,)
+    A_t = A.reshape(N * H, U).T                                  # (U, NH)
+    y_route = A_t.sum(-1) - 1.0                                  # (U,)
+    y_lat = (A_t * c["T_t"]).sum(-1) - c["ddl"]
+    y_load = (A_t * c["L_t"]).sum(-1) - c["s_u"]
+    xg = jnp.swapaxes(x[:, :, 1:], 1, 2)                         # (N, H, M)
+    # one-hot GEMM over M: exactly one term per output, so bit-identical
+    # to the gather xg[:, :, m_u] it replaces — and faster, M is tiny and
+    # the contraction vectorizes where the gather's index plumbing won't
+    xa = jax.lax.dot_general(
+        xg, c["onehot_mu"], (((2,), (1,)), ((), ())),
+        preferred_element_type=x.dtype)                          # (N, H, U)
+    return y_eq, y_mem, y_route, y_lat, y_load, A - xa
+
+
+def _init_state(data, dtype):
+    """The reference's cold start (x = 1/(H+1), A = 0, y = K applied
+    once... the reference initializes y = 0 and we match it exactly:
+    zeros_like of one K application)."""
+    import jax.numpy as jnp
+
+    c = _constants(data, dtype)
+    N, M, H, U = c["dims"]
+    x = jnp.full((N, M, H + 1), 1.0 / (H + 1), dtype)
+    A = jnp.zeros((N, H, U), dtype)
+    y = tuple(jnp.zeros_like(v) for v in _apply_K(c, x, A))
+    return c, (x, A) + y
+
+
+def _fused_step(c, state):
+    """One PDHG iteration (prox-primal → over-relax → dual ascent) on the
+    fused state layout.  This is the single source of truth both engines
+    execute — identical expressions, identical float results."""
+    import jax
+    import jax.numpy as jnp
+
+    x, A, y_eq, y_mem, y_route, y_lat, y_load, y_ax = state
+    dtype = x.dtype
+    N, M, H, U = c["dims"]
+
+    # KT(y) for x, as one broadcast sum + one real GEMM over users
+    gx = y_eq[:, :, None] + y_mem[:, None, None] * c["sizes"][None]
+    gx_sub = jax.lax.dot_general(
+        y_ax, c["onehot_mu"], (((2,), (0,)), ((), ())),
+        preferred_element_type=dtype)                            # (N, H, M)
+    gx = gx.at[:, :, 1:].add(-jnp.swapaxes(gx_sub, 1, 2))
+    x_new = jnp.clip(x - c["tau_x"] * gx, 0.0, 1.0)
+    # routing prox with tau_A folded into the operator tensors; tau_prec
+    # carries the (negated) objective gradient
+    A_new = jnp.clip(
+        A - c["tau_A"] * (y_route[None, None, :] + y_ax)
+        - c["tAT"] * y_lat[None, None, :] - c["tAL"] * y_load[None, None, :]
+        + c["tau_prec"], 0.0, 1.0)
+    xb = 2 * x_new - x                                           # over-relax
+    Ab = 2 * A_new - A
+    k_eq, k_mem, k_route, k_lat, k_load, k_ax = _apply_K(c, xb, Ab)
+    return (x_new, A_new,
+            y_eq + c["sig_eq"] * k_eq,
+            jnp.maximum(y_mem + c["sig_mem"] * k_mem, 0.0),
+            jnp.maximum(y_route + c["sig_route"] * k_route, 0.0),
+            jnp.maximum(y_lat + c["sig_lat"] * k_lat, 0.0),
+            jnp.maximum(y_load + c["sig_load"] * k_load, 0.0),
+            jnp.maximum(y_ax + c["sig_ax"] * k_ax, 0.0))
+
+
+def _cast_state(state, dtype):
+    import jax.numpy as jnp
+
+    return tuple(jnp.asarray(v, dtype) for v in state)
+
+
+def _f64():
+    """float64, degraded to float32 when x64 is disabled (matching what
+    the reference kernel would silently compute under the same config)."""
+    import jax
+    import jax.numpy as jnp
+
+    return jax.dtypes.canonicalize_dtype(jnp.float64)
+
+
+def _finalize(state, dims):
+    """Fused state → the reference's (x (N,M,H+1), A (N,U,H)) float64."""
+    import jax.numpy as jnp
+
+    N, M, H, U = dims
+    x, A = state[0], state[1]
+    return (jnp.asarray(x, _f64()),
+            jnp.swapaxes(jnp.asarray(A, _f64()), 1, 2))
+
+
+# ---------------------------------------------------------------------------
+# engine: lax.scan (the XLA realization; production path off-TPU)
+# ---------------------------------------------------------------------------
+
+def _scan_phase(data, state, iters, dtype):
+    import jax
+
+    c = _constants(data, dtype)
+
+    def body(carry, _):
+        return _fused_step(c, carry), None
+
+    state, _ = jax.lax.scan(body, _cast_state(state, dtype), None,
+                            length=int(iters))
+    return state
+
+
+# ---------------------------------------------------------------------------
+# engine: Pallas (state resident in VMEM across an iteration block)
+# ---------------------------------------------------------------------------
+
+def _pallas_phase(data, state, iters, dtype, block=PALLAS_BLOCK,
+                  interpret=None):
+    """``iters`` fused iterations as Pallas grid steps of ``block``
+    iterations each.  The eight state tensors live in VMEM scratch for the
+    whole call: loaded from the inputs at grid step 0, advanced in-place
+    ``block`` steps per grid step, and emitted on the last step — one
+    kernel invocation per iteration block, zero HBM round-trips inside.
+
+    The kernel body executes ``_fused_step`` verbatim; output matches
+    ``_scan_phase`` at the same dtype up to XLA FMA contraction (dtype
+    ulp per step, asserted in interpret mode by
+    tests/test_pdhg_fused.py)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+
+    iters = int(iters)
+    if iters <= 0:
+        return _cast_state(state, dtype)
+    block = max(1, min(int(block), iters))
+    n_blocks, rem = divmod(iters, block)
+
+    c = _constants(data, dtype)
+    state = _cast_state(state, dtype)
+    shapes = [jax.ShapeDtypeStruct(v.shape, v.dtype) for v in state]
+    n_state = len(state)
+    # constants the step reads, as kernel inputs (whole-array blocks)
+    const_keys = ("sizes", "onehot_mu", "R", "ddl", "s_u", "T_t", "L_t",
+                  "sig_eq", "sig_mem", "sig_route", "sig_lat",
+                  "sig_load", "tau_x", "tau_A", "tau_prec", "tAT", "tAL")
+    consts = [c[k] for k in const_keys]
+
+    def run(state, n_steps, n_blk):
+        def kernel(*refs):
+            in_refs = refs[:n_state + len(consts)]
+            out_refs = refs[n_state + len(consts):
+                            n_state + len(consts) + n_state]
+            scratch = refs[n_state + len(consts) + n_state:]
+            cc = {k: v[...] for k, v in zip(const_keys, in_refs[n_state:])}
+            cc["sig_ax"] = c["sig_ax"]
+            cc["dims"] = c["dims"]
+
+            j = pl.program_id(0)
+
+            @pl.when(j == 0)
+            def _load():
+                for s, r in zip(scratch, in_refs[:n_state]):
+                    s[...] = r[...]
+
+            cur = tuple(s[...] for s in scratch)
+            for _ in range(n_steps):
+                cur = _fused_step(cc, cur)
+            for s, v in zip(scratch, cur):
+                s[...] = v
+
+            @pl.when(j == n_blk - 1)
+            def _emit():
+                for o, s in zip(out_refs, scratch):
+                    o[...] = s[...]
+
+        return pl.pallas_call(
+            kernel,
+            grid=(n_blk,),
+            in_specs=[pl.BlockSpec(v.shape, lambda j, sh=v.shape:
+                                   (0,) * len(sh))
+                      for v in list(state) + consts],
+            out_specs=[pl.BlockSpec(s.shape, lambda j, sh=s.shape:
+                                    (0,) * len(sh))
+                       for s in shapes],
+            out_shape=shapes,
+            scratch_shapes=[_vmem(v.shape, v.dtype) for v in state],
+            interpret=interpret,
+        )(*state, *consts)
+
+    if n_blocks:
+        state = tuple(run(state, block, n_blocks))
+    if rem:
+        state = tuple(run(state, rem, 1))
+    return state
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# public entry point
+# ---------------------------------------------------------------------------
+
+def pdhg_fused(data, iters: int, polish: int = POLISH_TAIL,
+               engine: str = "auto", block: int = PALLAS_BLOCK,
+               interpret=None):
+    """The fused mixed-precision PDHG solve of one (padded) window.
+
+    Runs ``iters - polish`` float32 sweep iterations then ``polish``
+    float64 iterations of the same fused step, and returns float64
+    ``(x (N,M,H+1), A (N,U,H))`` in the reference layout.  ``engine``:
+
+      * ``"auto"``  — Pallas on TPU, ``lax.scan`` elsewhere (the fast
+        realization per platform; both run the identical step);
+      * ``"scan"``  — force the XLA scan realization;
+      * ``"pallas"`` — force the Pallas kernel (interpret mode is
+        auto-selected off-TPU, or pass ``interpret=`` explicitly).
+
+    Traceable (jit/vmap-safe) for fixed static ``iters``/``polish``.
+    """
+    import jax
+
+    if engine == "auto":
+        engine = "pallas" if jax.devices()[0].platform == "tpu" else "scan"
+    if engine not in ("scan", "pallas"):
+        raise ValueError(f"unknown engine {engine!r}; "
+                         "one of ('auto', 'scan', 'pallas')")
+    import jax.numpy as jnp
+
+    iters = int(iters)
+    polish = max(0, min(int(polish), iters))
+    sweep = iters - polish
+
+    phase = _scan_phase if engine == "scan" else functools.partial(
+        _pallas_phase, block=block, interpret=interpret)
+
+    f64 = _f64()
+    if sweep:
+        _, state = _init_state(data, jnp.float32)
+        state = phase(data, state, sweep, jnp.float32)
+    else:
+        _, state = _init_state(data, f64)
+    state = phase(data, state, polish, f64)
+    N, M, H, U = _constants(data, f64)["dims"]
+    return _finalize(state, (N, M, H, U))
+
+
+def fused_vs_reference_gap(data, iters: int, polish: int = POLISH_TAIL):
+    """Max abs fractional gap between the fused scan solve and the f64
+    reference — the number the bench reports next to the decision gap."""
+    import jax.numpy as jnp
+
+    from repro.core import lp as LP
+
+    x_r, A_r = LP._pdhg_kernel(data, iters)
+    x_f, A_f = pdhg_fused(data, iters, polish=polish, engine="scan")
+    return float(jnp.maximum(jnp.abs(x_f - x_r).max(),
+                             jnp.abs(A_f - A_r).max()))

@@ -82,6 +82,7 @@ class GridSpec:
     n_seeds: int = 1             # offline/policy: rounding seeds
     best_of: int = 8
     pdhg_iters: int = 4000
+    lp_backend: str = "reference"  # window LP solver ("reference"|"pallas")
     episodes: int = 150          # policy: GatMARL training budget
     backend: str = "sharded"     # "sharded" | "vmap"
     devices: int = None          # mesh size; None = all visible devices
@@ -337,7 +338,7 @@ def _run_offline(spec: GridSpec, mesh, stats):
                         np.stack([_fit_axes(u, (1, Nb), (2, Ub))
                                   for u in ups]))
         fn = _compile("offline", mesh, 3, _offline_inner(spec),
-                      int(spec.pdhg_iters), S)
+                      int(spec.pdhg_iters), S, spec.lp_backend)
         out = _run_chunks(spec, mesh, fn, args,
                           len(idx), stats, bucket_key=bucket.key)
         per = CC._unstack_device(stacked, out, S)
@@ -353,8 +354,10 @@ def _offline_inner(spec: GridSpec):
         from repro.core.cocar import _pipeline_kernel
 
         iters, n_seeds = int(spec.pdhg_iters), int(spec.n_seeds)
+        lp_backend = spec.lp_backend
         return jax.vmap(
-            lambda d, uc, up: _pipeline_kernel(d, uc, up, iters, n_seeds))
+            lambda d, uc, up: _pipeline_kernel(d, uc, up, iters, n_seeds,
+                                               backend=lp_backend))
     return make
 
 
@@ -414,7 +417,7 @@ def _run_policy(spec: GridSpec, mesh, stats):
                 return ((_take_rows(data, take),) + us
                         + tuple(_take_rows(g, take) for g in gat))
         fn = _compile("policy", mesh, 11, _policy_inner(spec),
-                      int(spec.pdhg_iters), S)
+                      int(spec.pdhg_iters), S, spec.lp_backend)
         out = _run_chunks(spec, mesh, fn, args, len(idx), stats,
                           bucket_key=bucket.key)
         for j, i in enumerate(idx):
@@ -438,8 +441,10 @@ def _policy_inner(spec: GridSpec):
         from repro.core.cocar import _policy_kernel
 
         iters, n_seeds = int(spec.pdhg_iters), int(spec.n_seeds)
+        lp_backend = spec.lp_backend
         return jax.vmap(
-            lambda *a: _policy_kernel(*a, iters, n_seeds))
+            lambda *a: _policy_kernel(*a, iters, n_seeds,
+                                      backend=lp_backend))
     return make
 
 

@@ -15,14 +15,35 @@ import pytest  # noqa: E402
 # Python signal machinery, so a plain SIGALRM handler cannot fail the test
 # — faulthandler's watchdog thread dumps every stack and kills the process
 # instead, which is exactly the "fail fast with a traceback" CI wants.
+#
+# Tests that legitimately need longer (big one-off compiles, e.g. the
+# Pallas interpret-mode kernels) mark themselves with
+# ``@pytest.mark.slow_compile`` (timeout × 3) or
+# ``@pytest.mark.timeout_factor(k)`` — the budget scales instead of the
+# watchdog being disabled, so a genuine hang still dies, just later.
 _TEST_TIMEOUT = float(os.environ.get("REPRO_TEST_TIMEOUT", "0") or 0)
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow_compile: triple the REPRO_TEST_TIMEOUT watchdog "
+        "budget (one-off heavy jit/interpret compiles)")
+    config.addinivalue_line(
+        "markers", "timeout_factor(k): scale the REPRO_TEST_TIMEOUT "
+        "watchdog budget by k for this test")
+
+
 @pytest.fixture(autouse=_TEST_TIMEOUT > 0)
-def _per_test_timeout():
+def _per_test_timeout(request):
     import faulthandler
 
-    faulthandler.dump_traceback_later(_TEST_TIMEOUT, exit=True)
+    budget = _TEST_TIMEOUT
+    if request.node.get_closest_marker("slow_compile") is not None:
+        budget *= 3.0
+    factor = request.node.get_closest_marker("timeout_factor")
+    if factor is not None and factor.args:
+        budget *= float(factor.args[0])
+    faulthandler.dump_traceback_later(budget, exit=True)
     yield
     faulthandler.cancel_dump_traceback_later()
 

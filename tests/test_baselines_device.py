@@ -8,8 +8,9 @@ from repro.core import baselines as BL
 from repro.core import cocar as CC
 from repro.core import lp as LP
 from repro.mec import metrics as MET
-from repro.mec.scenario import MECConfig, Scenario, stack_instances
-from test_offline_batched import make_instance, tiny_instance
+from harness import make_instance, tiny_instance
+
+from repro.mec.scenario import MECConfig, stack_instances
 
 
 def _x64():

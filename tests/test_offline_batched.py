@@ -3,45 +3,14 @@ dispatch) vs the NumPy reference: decision-identical equivalence on whole
 grids, repair edge cases asserted on BOTH paths, and the deterministic
 reduction (`tree_sum`) invariants the equivalence rides on."""
 import numpy as np
+from harness import make_instance, tiny_instance
 
 from repro.core import cocar as CC
 from repro.core import lp as LP
-from repro.core.jdcr import JDCRInstance, check_feasible, objective_sel, tree_sum
+from repro.core.jdcr import check_feasible, objective_sel, tree_sum
 from repro.core.rounding import repair, repair_device, round_from_uniforms
 from repro.mec import metrics as MET
-from repro.mec.scenario import MECConfig, Scenario, stack_instances
-
-
-def make_instance(seed=0, n_users=40, n_bs=3, n_models=4):
-    cfg = MECConfig(n_bs=n_bs, n_users=n_users, n_models=n_models, seed=seed)
-    sc = Scenario(cfg)
-    return sc.instance(0, sc.empty_cache())
-
-
-def tiny_instance(n_bs=1, m_u=(0, 1), prec2=(0.9, 0.8), R=25.0,
-                  ddl=10.0, sizes12=(10.0, 20.0)):
-    """Hand-built 2-model, 2-submodel instance for repair edge cases:
-    negligible latencies (unless ``ddl`` is shrunk), zero load times."""
-    M, H = 2, 2
-    U = len(m_u)
-    sizes = np.zeros((M, H + 1))
-    sizes[:, 1], sizes[:, 2] = sizes12
-    prec = np.zeros((M, H + 1))
-    prec[:, 1] = np.asarray(prec2) / 2.0
-    prec[:, 2] = np.asarray(prec2)
-    flops = np.zeros((M, H + 1))
-    flops[:, 1:] = 1e-3
-    x_prev = np.zeros((n_bs, M, H + 1))
-    x_prev[:, :, 0] = 1.0
-    return JDCRInstance(
-        sizes=sizes, prec=prec, flops=flops,
-        loadD=np.zeros((M, H + 1, H + 1)),
-        R=np.full(n_bs, R), C=np.full(n_bs, 100.0),
-        phi=np.full(n_bs, 100.0), wired=np.full((n_bs, n_bs), 1e12),
-        lam=np.zeros((n_bs, n_bs)), m_u=np.asarray(m_u),
-        d_u=np.full(U, 0.1), ddl=np.full(U, ddl),
-        s_u=np.full(U, 10.0), home=np.zeros(U, dtype=int),
-        x_prev=x_prev)
+from repro.mec.scenario import MECConfig, stack_instances
 
 
 def both_repairs(inst, x, A):

@@ -5,39 +5,25 @@ path (on a 1-device mesh — the multi-device run is exercised by
 ``benchmarks/bench_scale.py`` under
 ``--xla_force_host_platform_device_count=8`` in CI), mesh validation,
 and jit-cache stability across repeated sweeps."""
+import harness
 import numpy as np
 import pytest
+from harness import assert_same_offline
 
 from repro.core import cocar as CC
 from repro.core.online import OnlineConfig
-from repro.mec.scenario import MECConfig, Scenario, stack_instances
+from repro.mec.scenario import MECConfig, stack_instances
 from repro.scale import GridSpec, plan_buckets, run_grid
 from repro.scale.executor import compiled_cache_stats
 from repro.traces import engine as E
 from repro.traces.registry import make_trace
-
-
-def make_instance(seed=0, n_users=16, n_bs=3, n_models=4):
-    cfg = MECConfig(n_bs=n_bs, n_users=n_users, n_models=n_models,
-                    seed=seed)
-    sc = Scenario(cfg)
-    return sc.instance(0, sc.empty_cache())
-
 
 #: heterogeneous (seed, n_users, n_bs) grid shared by the identity tests
 HETERO = [(0, 16, 3), (1, 20, 4), (2, 16, 3), (3, 24, 4), (4, 20, 3)]
 
 
 def hetero_insts():
-    return [make_instance(seed=s, n_users=u, n_bs=n) for s, u, n in HETERO]
-
-
-def assert_same_offline(a, b):
-    for per_a, per_b in zip(a, b):
-        for (xa, Aa, ia), (xb, Ab, ib) in zip(per_a, per_b):
-            np.testing.assert_array_equal(xa, xb)
-            np.testing.assert_array_equal(Aa, Ab)
-            assert ia["best_t"] == ib["best_t"]
+    return harness.hetero_insts(HETERO)
 
 
 # ---------------------------------------------------------------------------
