@@ -34,7 +34,6 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import resource                                             # noqa: E402
-import time                                                 # noqa: E402
 from dataclasses import replace                             # noqa: E402
 
 import numpy as np                                          # noqa: E402
@@ -43,6 +42,7 @@ from benchmarks import common                               # noqa: E402
 from repro.experiments.sweep import DEFAULT_AXES            # noqa: E402
 from repro.mec.scenario import (MECConfig, Scenario,        # noqa: E402
                                 config_grid)
+from repro.obs import TRACER                                # noqa: E402
 from repro.scale import GridSpec, run_grid                  # noqa: E402
 
 N_DEVICES = 8
@@ -150,14 +150,15 @@ def bench_throughput(n_variants=None, n_users=40, n_seeds=2, best_of=8,
 
     # warm both compile caches, then measure steady state
     run_grid(GridSpec(**kw, backend="vmap"))
-    t0 = time.time()
-    one_dev = run_grid(GridSpec(**kw, backend="vmap"))
-    t_vmap = time.time() - t0
+    with TRACER.span("bench:one_device", variants=n_variants) as sp:
+        one_dev = run_grid(GridSpec(**kw, backend="vmap"))
+    t_vmap = sp.seconds
 
     run_grid(GridSpec(**kw, backend="sharded", chunk_size=chunk))
-    t0 = time.time()
-    shd = run_grid(GridSpec(**kw, backend="sharded", chunk_size=chunk))
-    t_shard = time.time() - t0
+    with TRACER.span("bench:sharded", variants=n_variants,
+                     chunk=chunk) as sp:
+        shd = run_grid(GridSpec(**kw, backend="sharded", chunk_size=chunk))
+    t_shard = sp.seconds
 
     identical, obj_gap, met_gap = _compare_offline(one_dev.results,
                                                    shd.results)

@@ -33,18 +33,25 @@ def paper_online_cfg(**kw):
 
 def save(name: str, payload, subdir: str = None):
     """Persist a result payload; ``subdir`` keeps scratch outputs (e.g.
-    the CI smoke runs) out of the committed baseline files."""
+    the CI smoke runs) out of the committed baseline files.  A sibling
+    ``<name>.manifest.json`` (git SHA, jax/device info, config hash —
+    ``repro.obs.manifest``) records the provenance of every run; the
+    manifests are gitignored, so committed baselines stay clean."""
+    from repro.obs import write_manifest
+
     root = RESULTS / subdir if subdir else RESULTS
     root.mkdir(parents=True, exist_ok=True)
     path = root / f"{name}.json"
     path.write_text(json.dumps(payload, indent=1, default=float))
+    write_manifest(path, config={"bench": name, "subdir": subdir,
+                                 "full": FULL})
     return path
 
 
 def timed(fn, *args, **kw):
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = fn(*args, **kw)
-    return out, time.time() - t0
+    return out, time.perf_counter() - t0
 
 
 def csv_row(name: str, us_per_call: float, derived: str):

@@ -51,4 +51,16 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     JAX_ENABLE_X64=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.bench_scale --smoke
+# observability smoke (repro.obs): a tiny sharded offline sweep with the
+# jit-safe diagnostics taps ON, then report.py over its artifacts —
+# manifests, span traces, and the convergence gate (every smoke window
+# must clear DEFAULT_TOL; the truncated bench budgets above are
+# drift-gated by check_bench instead)
+XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.experiments.sweep --smoke --shard
+python scripts/report.py results/sweep/ci --check-converged \
+    | tee /tmp/obs_report.txt
+grep -q "== Convergence" /tmp/obs_report.txt \
+    || { echo "ci.sh: report.py produced no convergence section"; exit 1; }
 python scripts/check_bench.py --fresh results/bench/ci

@@ -1,0 +1,253 @@
+#!/usr/bin/env python
+"""Render the observability artifacts a run leaves behind.
+
+Scans a results directory (default ``results/sweep``) for
+
+  * ``*.manifest.json``   — run provenance (``repro.obs.manifest``):
+    git SHA, jax/device info, seeds, config hash;
+  * ``*.trace.jsonl``     — span exports (``repro.obs.tracing``):
+    per-phase wall times, retrace counts, per-chunk bytes/throughput;
+  * ``grid.json`` / ``policy_grid.json`` / ``online_grid.json`` — sweep
+    tables with the jit-safe solver/scan diagnostics columns;
+  * ``BENCH_*.json``      — bench payloads (convergence keys only).
+
+and prints a compact report: slowest spans, per-jit retrace counts,
+per-chunk throughput (bytes / span seconds) and padding waste, the PDHG
+convergence table, and online cache telemetry.  Pure stdlib — no jax,
+no numpy — so it runs anywhere the JSON landed (CI artifact dirs,
+laptops, containers).
+
+Usage:
+    python scripts/report.py [DIR ...] [--top N] [--check-converged]
+
+``--check-converged`` exits 1 if any sweep window's final PDHG residual
+missed its tolerance — the sweep-side convergence gate (bench budgets
+are intentionally truncated and are drift-gated by ``check_bench.py``
+instead).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def _fmt_bytes(n):
+    for unit in ("B", "KB", "MB", "GB"):
+        if abs(n) < 1024 or unit == "GB":
+            return f"{n:.1f}{unit}" if unit != "B" else f"{int(n)}B"
+        n /= 1024.0
+
+
+def _load_json(path):
+    try:
+        return json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"  [warn] unreadable {path}: {e}")
+        return None
+
+
+def report_manifests(root):
+    paths = sorted(root.glob("*.manifest.json"))
+    if not paths:
+        return
+    print("\n== Manifests ==")
+    for p in paths:
+        m = _load_json(p)
+        if m is None:
+            continue
+        git = m.get("git") or {}
+        jx = m.get("jax") or {}
+        sha = (git.get("sha") or "?")[:12] + ("*" if git.get("dirty") else "")
+        dev = (f"{jx.get('backend', '?')}x{jx.get('device_count', '?')}"
+               if jx.get("imported") else "jax-not-imported")
+        print(f"  {p.name}: {m.get('created', '?')}  git {sha}  {dev}  "
+              f"x64={jx.get('x64')}  cfg {str(m.get('config_hash'))[:12]}")
+
+
+def _spans(root):
+    out = []
+    for p in sorted(root.glob("*.trace.jsonl")):
+        for line in p.read_text().splitlines():
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                out.append(json.loads(line))
+            except json.JSONDecodeError:
+                print(f"  [warn] bad span line in {p.name}")
+    return out
+
+
+def report_spans(spans, top):
+    if not spans:
+        return
+    print("\n== Spans ==")
+    by_name = {}
+    for s in spans:
+        d = by_name.setdefault(s["name"], dict(count=0, total=0.0,
+                                               retraces=0))
+        d["count"] += 1
+        d["total"] += s.get("seconds", 0.0)
+        d["retraces"] += s.get("retraces", 0)
+    for name, d in sorted(by_name.items(), key=lambda kv: -kv[1]["total"]):
+        print(f"  {name:24s} n={d['count']:<4d} total={d['total']:8.3f}s  "
+              f"retraces={d['retraces']}")
+    print(f"  total retraces across spans: "
+          f"{sum(d['retraces'] for d in by_name.values())}")
+    slowest = sorted(spans, key=lambda s: -s.get("seconds", 0.0))[:top]
+    print("  slowest:")
+    for s in slowest:
+        pad = "  " * s.get("depth", 0)
+        print(f"    {pad}{s['name']:20s} {s.get('seconds', 0.0):8.3f}s  "
+              f"{s.get('attrs', {})}")
+
+
+def report_chunks(spans):
+    chunks = [s for s in spans if s["name"] == "chunk"]
+    if not chunks:
+        return
+    print("\n== Chunks ==")
+    for s in chunks:
+        a = s.get("attrs", {})
+        sec = s.get("seconds", 0.0) or 1e-12
+        bps = a.get("in_bytes", 0) / sec
+        print(f"  {a.get('kind', '?'):8s} bucket={a.get('bucket', '?'):12s} "
+              f"chunk {a.get('chunk', '?')}/{a.get('n_chunks', '?')}  "
+              f"batch={a.get('batch', '?'):<4} "
+              f"pad={a.get('pad_rows', '?'):<3} "
+              f"{_fmt_bytes(a.get('in_bytes', 0)):>9s}  "
+              f"{sec:7.3f}s  {_fmt_bytes(bps)}/s")
+
+
+def _iter_rows(payload):
+    """grid.json is a row list; policy_grid.json is {rows, summary}."""
+    if isinstance(payload, dict):
+        return payload.get("rows", []), payload.get("summary", {})
+    return payload or [], {}
+
+
+def report_convergence(root):
+    """Aggregate sweep-side PDHG convergence; returns the number of
+    non-converged windows (``--check-converged`` gates on it)."""
+    bad = 0
+    seen = False
+    for name in ("grid.json", "policy_grid.json"):
+        p = root / name
+        if not p.exists():
+            continue
+        payload = _load_json(p)
+        if payload is None:
+            continue
+        rows, summary = _iter_rows(payload)
+        conv = summary.get("convergence")
+        if conv:
+            seen = True
+            bad += int(conv["n_not_converged"])
+            print(f"\n== Convergence ({name}) ==")
+            print(f"  {conv['n_windows']} windows, "
+                  f"{conv['n_not_converged']} not converged, "
+                  f"max final residual {conv['max_final_residual']:.3e} "
+                  f"(tol {conv['tol']:g})")
+            continue
+        res = [r["pdhg_final_residual"] for r in rows
+               if "pdhg_final_residual" in r]
+        if not res:
+            continue
+        seen = True
+        n_bad = sum(1 for r in rows if not r.get("pdhg_converged", True))
+        bad += n_bad
+        print(f"\n== Convergence ({name}) ==")
+        print(f"  {len(res)} windows, {n_bad} not converged, "
+              f"max final residual {max(res):.3e}")
+    if not seen:
+        return None
+    return bad
+
+
+def report_online(root):
+    p = root / "online_grid.json"
+    if not p.exists():
+        return
+    rows = _load_json(p)
+    if not rows:
+        return
+    print("\n== Online telemetry ==")
+    for r in rows:
+        extra = ""
+        if "mean_dl_in_flight" in r:
+            extra = (f"  dl_in_flight={r['mean_dl_in_flight']:.2f}  "
+                     f"evictions={r['evictions']:.0f}  "
+                     f"cache={r['final_cache_mb']:.0f}MB")
+        print(f"  {r.get('trace', '?'):12s} {r.get('algo', '?'):10s} "
+              f"qoe={r.get('avg_qoe', float('nan')):.3f} "
+              f"hit={r.get('hit_rate', float('nan')):.3f}{extra}")
+
+
+def report_bench(root):
+    keys = (("grid.pdhg_final_residual", "grid residual"),
+            ("grid.n_windows_not_converged", "grid not conv"),
+            ("solve.pdhg_final_residual", "solve residual"),
+            ("solve.pdhg_converged", "solve converged"))
+    lines = []
+    for p in sorted(root.glob("BENCH_*.json")):
+        payload = _load_json(p)
+        if payload is None:
+            continue
+        for dotted, label in keys:
+            cur = payload
+            for part in dotted.split("."):
+                cur = cur.get(part) if isinstance(cur, dict) else None
+                if cur is None:
+                    break
+            if cur is not None:
+                lines.append(f"  {p.name}: {label} = {cur}")
+    if lines:
+        print("\n== Bench convergence keys ==")
+        print("\n".join(lines))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("dirs", nargs="*", default=None,
+                    help="results directories (default: results/sweep)")
+    ap.add_argument("--top", type=int, default=10,
+                    help="slowest spans to show (default 10)")
+    ap.add_argument("--check-converged", action="store_true",
+                    help="exit 1 if any sweep window missed its PDHG "
+                         "tolerance")
+    args = ap.parse_args(argv)
+    dirs = [pathlib.Path(d) for d in (args.dirs or ["results/sweep"])]
+
+    total_bad, any_conv = 0, False
+    for root in dirs:
+        print(f"=== {root} ===")
+        if not root.is_dir():
+            print("  (missing)")
+            continue
+        report_manifests(root)
+        spans = _spans(root)
+        report_spans(spans, args.top)
+        report_chunks(spans)
+        bad = report_convergence(root)
+        if bad is not None:
+            any_conv = True
+            total_bad += bad
+        report_online(root)
+        report_bench(root)
+        print()
+    if args.check_converged:
+        if not any_conv:
+            print("check-converged: FAIL (no convergence data found)")
+            return 1
+        if total_bad:
+            print(f"check-converged: FAIL ({total_bad} window(s) above "
+                  f"tolerance)")
+            return 1
+        print("check-converged: OK (all windows within tolerance)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

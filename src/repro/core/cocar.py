@@ -27,6 +27,8 @@ from repro.core.rounding import (draw_rounding_uniforms, repair,
                                  repair_device, round_from_uniforms)
 from repro.mec import metrics as MET
 from repro.mec.scenario import MECConfig, Scenario, StackedWindows, stack_instances
+from repro.obs.diagnostics import lp_diag_summary
+from repro.obs.tracing import register_jit
 
 
 def _round_and_repair(inst: JDCRInstance, x_f, A_f, seed: int, best_of: int):
@@ -69,17 +71,21 @@ def cocar_window(inst: JDCRInstance, seed: int = 0, solver: str = "scipy",
 # ---------------------------------------------------------------------------
 
 def _pipeline_kernel(data, u_cat, u_phi, iters, n_seeds,
-                     backend: str = "reference"):
+                     backend: str = "reference", diagnostics: bool = False):
     """One padded window through LP → round → repair → argmax → metrics,
     entirely in jnp.  ``u_cat (S·T, N, M)`` / ``u_phi (S·T, N, U, H)``
     carry ``n_seeds`` independent rounding seeds of ``best_of`` trials
     each; the best trial *per seed* is selected on device.  ``backend``
     picks the LP solver ("reference" or "pallas", see
-    ``repro.core.lp.LP_BACKENDS``) — decisions are identical either way."""
+    ``repro.core.lp.LP_BACKENDS``) — decisions are identical either way.
+    ``diagnostics=True`` adds the solver's residual/objective curves
+    under ``"lp_diag"`` without changing any decision bit."""
     import jax
     import jax.numpy as jnp
 
-    x_f, A_f = LP._lp_solve_kernel(data, iters, backend)
+    lp_out = LP._lp_solve_kernel(data, iters, backend,
+                                 diagnostics=diagnostics)
+    x_f, A_f = lp_out[0], lp_out[1]
     x_r, A_r = round_from_uniforms(x_f, A_f, data.onehot_mu, u_cat, u_phi)
     x_p, A_p = jax.vmap(repair_device, in_axes=(None, 0, 0))(data, x_r, A_r)
     objs = jax.vmap(lambda a: objective_sel(data.prec_u, a))(A_p)
@@ -91,17 +97,23 @@ def _pipeline_kernel(data, u_cat, u_phi, iters, n_seeds,
     met = jax.vmap(lambda xx, aa: MET.window_metrics_device(data, xx, aa))(
         x_b, A_b)
     lp_obj = jnp.einsum("nuh,uh->", A_f, data.prec_u)
-    return {"x_frac": x_f, "A_frac": A_f, "x": x_b, "A": A_b,
-            "trial_objs": objs, "best_t": best_t, "metrics": met,
-            "lp_obj": lp_obj}
+    out = {"x_frac": x_f, "A_frac": A_f, "x": x_b, "A": A_b,
+           "trial_objs": objs, "best_t": best_t, "metrics": met,
+           "lp_obj": lp_obj}
+    if diagnostics:
+        out["lp_diag"] = lp_out[2]
+    return out
 
 
 @functools.cache
-def _pipeline_jitted(backend: str = "reference"):
+def _pipeline_jitted(backend: str = "reference", diagnostics: bool = False):
     import jax
-    fn = jax.vmap(functools.partial(_pipeline_kernel, backend=backend),
+    fn = jax.vmap(functools.partial(_pipeline_kernel, backend=backend,
+                                    diagnostics=diagnostics),
                   in_axes=(0, 0, 0, None, None))
-    return jax.jit(fn, static_argnums=(3, 4))
+    jitted = jax.jit(fn, static_argnums=(3, 4))
+    return register_jit(
+        f"cocar:pipeline:{backend}:diag={int(bool(diagnostics))}", jitted)
 
 
 def offline_uniforms(stacked: StackedWindows, seed: int, n_seeds: int,
@@ -117,20 +129,22 @@ def offline_uniforms(stacked: StackedWindows, seed: int, n_seeds: int,
 
 def offline_pipeline_device(stacked: StackedWindows, u_cat, u_phi,
                             pdhg_iters: int = 4000, n_seeds: int = 1,
-                            lp_backend: str = "reference"):
+                            lp_backend: str = "reference",
+                            diagnostics: bool = False):
     """The whole offline grid in ONE jitted/vmapped f64 dispatch.
 
     Returns a dict of padded numpy arrays: fractional solutions
     ``x_frac (B,N,M,H+1)`` / ``A_frac``, best-per-seed integral solutions
     ``x (B,S,...)`` / ``A``, per-trial objectives ``trial_objs (B,S,T)``,
     the winning trial indices ``best_t (B,S)``, window ``metrics`` (dict of
-    (B,S) arrays), and ``lp_obj (B,)``.
+    (B,S) arrays), and ``lp_obj (B,)`` — plus batched solver curves under
+    ``lp_diag`` when ``diagnostics`` is on.
     """
     from jax.experimental import enable_x64
 
     with enable_x64():
-        out = _pipeline_jitted(lp_backend)(stacked.data, u_cat, u_phi,
-                                           int(pdhg_iters), int(n_seeds))
+        out = _pipeline_jitted(lp_backend, bool(diagnostics))(
+            stacked.data, u_cat, u_phi, int(pdhg_iters), int(n_seeds))
     return {k: ({kk: np.asarray(vv) for kk, vv in v.items()}
                 if isinstance(v, dict) else np.asarray(v))
             for k, v in out.items()}
@@ -196,7 +210,7 @@ def _eval_policy(data, x, A):
 
 def _policy_kernel(data, u_cat, u_phi, u_cat_s, u_phi_s, u_perm, u_h,
                    u_route, gat_params, gat_feats, gat_adj, iters, n_seeds,
-                   backend: str = "reference"):
+                   backend: str = "reference", diagnostics: bool = False):
     """One padded window through ALL five policies, entirely in jnp.
 
     CoCaR runs the fused LP → round → repair → argmax pipeline
@@ -218,10 +232,12 @@ def _policy_kernel(data, u_cat, u_phi, u_cat_s, u_phi_s, u_perm, u_h,
     # (enforce is an identity post-repair, asserted in
     # tests/test_offline_batched.py), so the pipeline's own metrics stand
     coc = _pipeline_kernel(data, u_cat, u_phi, iters, n_seeds,
-                           backend=backend)
+                           backend=backend, diagnostics=diagnostics)
     out["cocar"] = {"x": coc["x"], "A": coc["A"], "metrics": coc["metrics"]}
     out["lp_obj"] = coc["lp_obj"]
     out["cocar_frac"] = {"x": coc["x_frac"], "A": coc["A_frac"]}
+    if diagnostics:
+        out["lp_diag"] = coc["lp_diag"]
 
     relaxed = BL.spr3_relax_device(data)
     xs_f, As_f = LP._lp_solve_kernel(relaxed, iters, backend)
@@ -254,11 +270,14 @@ def _policy_kernel(data, u_cat, u_phi, u_cat_s, u_phi_s, u_perm, u_h,
 
 
 @functools.cache
-def _policy_jitted(backend: str = "reference"):
+def _policy_jitted(backend: str = "reference", diagnostics: bool = False):
     import jax
-    fn = jax.vmap(functools.partial(_policy_kernel, backend=backend),
+    fn = jax.vmap(functools.partial(_policy_kernel, backend=backend,
+                                    diagnostics=diagnostics),
                   in_axes=(0,) * 11 + (None, None))
-    return jax.jit(fn, static_argnums=(11, 12))
+    jitted = jax.jit(fn, static_argnums=(11, 12))
+    return register_jit(
+        f"cocar:policy:{backend}:diag={int(bool(diagnostics))}", jitted)
 
 
 def policy_uniforms(stacked: StackedWindows, seed: int, n_seeds: int,
@@ -319,13 +338,15 @@ def policy_grid_device(stacked: StackedWindows, seed: int = 0,
                        pdhg_iters: int = 4000, best_of: int = 8,
                        n_seeds: int = 1, episodes: int = 150,
                        uniforms=None, gat=None,
-                       lp_backend: str = "reference"):
+                       lp_backend: str = "reference",
+                       diagnostics: bool = False):
     """CoCaR + the four baselines over (windows × seeds) in ONE jitted/
     vmapped f64 dispatch (GatMARL training excepted — host-side, cached).
 
     Returns nested numpy: ``out[policy] = {x (B,S,...), A (B,S,...),
     metrics {k: (B,S)}}`` plus ``lp_obj (B,)`` and SPR³'s fractional
-    solution (``spr3_frac``) for the host oracle.
+    solution (``spr3_frac``) for the host oracle — plus CoCaR's batched
+    solver curves under ``lp_diag`` when ``diagnostics`` is on.
     """
     from jax.experimental import enable_x64
 
@@ -335,9 +356,9 @@ def policy_grid_device(stacked: StackedWindows, seed: int = 0,
         gat_grid_policies(stacked, seed, episodes)
     gat_params, gat_feats, gat_adj = gat
     with enable_x64():
-        out = _policy_jitted(lp_backend)(stacked.data, *uniforms, gat_params,
-                                         gat_feats, gat_adj, int(pdhg_iters),
-                                         int(n_seeds))
+        out = _policy_jitted(lp_backend, bool(diagnostics))(
+            stacked.data, *uniforms, gat_params, gat_feats, gat_adj,
+            int(pdhg_iters), int(n_seeds))
 
     def to_np(tree):
         if isinstance(tree, dict):
@@ -412,9 +433,16 @@ def improvement_ratio(metrics_by_policy, key: str = "avg_precision"):
 
 def _unstack_device(stacked: StackedWindows, out, n_seeds: int):
     """Slice the padded device pipeline outputs back into the
-    ``results[b][s] = (x, A, info)`` shape of the host reference."""
+    ``results[b][s] = (x, A, info)`` shape of the host reference.  When
+    the dispatch carried the diagnostics tap, each info dict gains the
+    window's ``lp_diag``: the sampled curves plus their host summary
+    (curves are per-window, so every seed shares the same record)."""
     results = []
     for i, inst in enumerate(stacked.insts):
+        lp_diag = None
+        if "lp_diag" in out:
+            curves = {k: np.asarray(v[i]) for k, v in out["lp_diag"].items()}
+            lp_diag = {**curves, "summary": lp_diag_summary(curves)}
         per_seed = []
         for s in range(n_seeds):
             info = {"lp_obj": float(out["lp_obj"][i]),
@@ -424,6 +452,8 @@ def _unstack_device(stacked: StackedWindows, out, n_seeds: int):
                     "trial_objs": out["trial_objs"][i, s],
                     "metrics": {k: float(v[i, s])
                                 for k, v in out["metrics"].items()}}
+            if lp_diag is not None:
+                info["lp_diag"] = lp_diag
             per_seed.append((out["x"][i, s, :inst.N],
                              out["A"][i, s, :inst.N, :inst.U], info))
         results.append(per_seed)
@@ -433,7 +463,8 @@ def _unstack_device(stacked: StackedWindows, out, n_seeds: int):
 def cocar_grid(insts, seed: int = 0, pdhg_iters: int = 4000,
                best_of: int = 8, n_seeds: int = 1, backend: str = "device",
                devices: int = None, chunk_size: int = 0,
-               max_buckets: int = 1, lp_backend: str = "reference"):
+               max_buckets: int = 1, lp_backend: str = "reference",
+               diagnostics: bool = False):
     """CoCaR over a grid of independent windows × rounding seeds.
 
     ``backend="device"``: the fused LP → rounding → repair → metrics
@@ -447,7 +478,9 @@ def cocar_grid(insts, seed: int = 0, pdhg_iters: int = 4000,
     dispatch, then per-(window, seed, trial) NumPy rounding + repair.
     ``lp_backend`` independently picks the window LP solver ("reference"
     or "pallas" — the fused mixed-precision kernel, decision-identical).
-    Returns ``results[b][s] = (x, A, info)``.
+    ``diagnostics`` threads the jit-safe solver tap through the device /
+    sharded executors (the host reference has no tap — it checks
+    feasibility directly).  Returns ``results[b][s] = (x, A, info)``.
     """
     insts = list(insts)
     if backend in ("device", "sharded"):
@@ -458,7 +491,8 @@ def cocar_grid(insts, seed: int = 0, pdhg_iters: int = 4000,
             best_of=best_of, pdhg_iters=pdhg_iters,
             backend="vmap" if backend == "device" else "sharded",
             devices=devices, chunk_size=chunk_size,
-            max_buckets=max_buckets, lp_backend=lp_backend)
+            max_buckets=max_buckets, lp_backend=lp_backend,
+            diagnostics=diagnostics)
         return run_grid(spec).results
     if backend != "host":
         raise ValueError(f"unknown backend {backend!r}")

@@ -32,6 +32,11 @@ from typing import NamedTuple
 import numpy as np
 
 from repro.core.jdcr import JDCRInstance
+from repro.obs.diagnostics import DEFAULT_TOL as PDHG_TOL
+from repro.obs.tracing import register_jit
+
+#: Default sampling stride (iterations) for the diagnostics tap.
+DIAG_STRIDE = 50
 
 
 # ---------------------------------------------------------------------------
@@ -178,12 +183,29 @@ def pdhg_data(inst: JDCRInstance) -> PDHGData:
         home_onehot=home_onehot)
 
 
-def _pdhg_kernel(data: PDHGData, iters: int):
+def _pdhg_kernel(data: PDHGData, iters: int, diagnostics: bool = False,
+                 diag_stride: int = DIAG_STRIDE):
     """One window's PDHG solve as a pure jnp function of ``data``.
 
     Chambolle–Pock with Pock–Chambolle diagonal step sizes (alpha = 1):
     tau_j = 1/sum_i |K_ij|, sigma_i = 1/sum_j |K_ij|.  Duals: the one-hot
     equality (N,M) is free, every inequality dual is projected to >= 0.
+
+    With ``diagnostics=True`` the same iteration runs as nested scans over
+    ``diag_stride``-sized segments (bit-identical composition — the scan
+    body is unchanged and segment boundaries only read the carry) and the
+    return grows a third element: a jit-safe pytree of curves sampled at
+    each stride boundary plus the final iterate —
+
+      iters       (S,) int32   sampled iteration counts
+      primal_res  (S,)         scaled primal residual (the same masked
+                               max the host ``pdhg_primal_residual``
+                               computes: memory / max(R), route, A <= x,
+                               one-submodel equality)
+      dual_res    (S,)         fixed-point displacement of one extra
+                               PDHG step at the sampled iterate (0 at a
+                               saddle point)
+      obj         (S,)         LP objective trajectory
     """
     import jax
     import jax.numpy as jnp
@@ -256,8 +278,52 @@ def _pdhg_kernel(data: PDHGData, iters: int):
                                 for yy, s, kk in zip(y, sig, Ky)))
         return (x_new, A_new, y_new), None
 
-    (x, A, y), _ = jax.lax.scan(body, (x, A, y), None, length=iters)
-    return x, A
+    if not diagnostics:
+        (x, A, y), _ = jax.lax.scan(body, (x, A, y), None, length=iters)
+        return x, A
+
+    bs = bs_mask > 0                                            # (N,)
+    um = onehot_mu.sum(-1) > 0                                  # (U,)
+    r_scale = 1.0 / jnp.maximum(R.max(), 1e-9)
+
+    def sample(carry):
+        x, A, _ = carry
+        y_eq, y_mem, y_route, _, _, y_ax = K(x, A)
+        r_eq = jnp.max(jnp.where(bs[:, None], jnp.abs(y_eq), 0.0))
+        r_mem = jnp.max(jnp.where(bs, y_mem, -jnp.inf)) * r_scale
+        r_route = jnp.max(jnp.where(um, y_route, -jnp.inf))
+        primal = jnp.maximum(
+            jnp.maximum(jnp.maximum(r_eq, r_mem),
+                        jnp.maximum(r_route, jnp.max(y_ax))), 0.0)
+        (x2, A2, _), _ = body(carry, None)
+        dual = jnp.maximum(jnp.abs(x2 - x).max(), jnp.abs(A2 - A).max())
+        obj = jnp.einsum("nuh,uh->", A, prec_u)
+        return primal, dual, obj
+
+    n_seg, rem = divmod(int(iters), int(diag_stride))
+
+    def seg(carry, _):
+        carry, _ = jax.lax.scan(body, carry, None, length=diag_stride)
+        return carry, sample(carry)
+
+    carry = (x, A, y)
+    curves = []
+    if n_seg:
+        carry, curves = jax.lax.scan(seg, carry, None, length=n_seg)
+    if rem:
+        carry, _ = jax.lax.scan(body, carry, None, length=rem)
+    sampled = [diag_stride * (s + 1) for s in range(n_seg)]
+    if rem or not n_seg:  # final iterate not already on a stride boundary
+        final = sample(carry)
+        sampled.append(int(iters))
+        pr, dr, ob = (jnp.concatenate([curves[i], final[i][None]])
+                      if n_seg else final[i][None] for i in range(3))
+    else:
+        pr, dr, ob = curves
+    diag = {"iters": jnp.asarray(sampled, dtype=jnp.int32),
+            "primal_res": pr, "dual_res": dr, "obj": ob}
+    x, A, _ = carry
+    return x, A, diag
 
 
 #: LP solver backends: "reference" is the plain f64 kernel above;
@@ -266,34 +332,53 @@ def _pdhg_kernel(data: PDHGData, iters: int):
 LP_BACKENDS = ("reference", "pallas")
 
 
-def _lp_solve_kernel(data, iters: int, backend: str = "reference"):
+def _lp_solve_kernel(data, iters: int, backend: str = "reference",
+                     diagnostics: bool = False,
+                     diag_stride: int = DIAG_STRIDE):
     """Traceable (x, A) window solve dispatching on ``backend``.  Both
     backends return float64 x (N,M,H+1) / A (N,U,H); "pallas" produces
     fractionals within rounding-margin of the reference, so downstream
     decisions (rounding, repair, winning trials) are identical — the
-    contract tests/test_pdhg_fused.py enforces."""
+    contract tests/test_pdhg_fused.py enforces.
+
+    ``diagnostics=True`` appends a jit-safe curves pytree as a third
+    return (see ``_pdhg_kernel``); the decision arrays are bit-identical
+    either way (tests/test_obs.py)."""
     if backend == "reference":
-        return _pdhg_kernel(data, iters)
+        return _pdhg_kernel(data, iters, diagnostics=diagnostics,
+                            diag_stride=diag_stride)
     if backend == "pallas":
         from repro.kernels.pdhg_fused import pdhg_fused
-        return pdhg_fused(data, iters)
+        return pdhg_fused(data, iters, diagnostics=diagnostics,
+                          diag_stride=diag_stride)
     raise ValueError(f"unknown LP backend {backend!r}; one of {LP_BACKENDS}")
 
 
 _JIT_CACHE = {}
 
 
-def _jitted_kernel(batched: bool, backend: str = "reference"):
-    """Module-level jit cache: one compile per (batched, backend, shape,
-    iters) — repeat calls at the same shapes (e.g. window loops) skip
-    tracing."""
-    key = ("batched" if batched else "single", backend)
+def _jitted_kernel(batched: bool, backend: str = "reference",
+                   diagnostics: bool = False,
+                   diag_stride: int = DIAG_STRIDE):
+    """Module-level jit cache: one compile per (batched, backend, diag,
+    shape, iters) — repeat calls at the same shapes (e.g. window loops)
+    skip tracing.  Every cached entry point is registered with
+    ``repro.obs`` so span retrace counters see it."""
+    mode = "batched" if batched else "single"
+    # the stride is only a trace constant when the tap is on; normalize
+    # it out of the key otherwise so diag-off callers share one compile
+    key = (mode, backend, bool(diagnostics),
+           int(diag_stride) if diagnostics else None)
     if key not in _JIT_CACHE:
         import jax
-        fn = functools.partial(_lp_solve_kernel, backend=backend)
+        fn = functools.partial(_lp_solve_kernel, backend=backend,
+                               diagnostics=diagnostics,
+                               diag_stride=diag_stride)
         if batched:
             fn = jax.vmap(fn, in_axes=(0, None))
-        _JIT_CACHE[key] = jax.jit(fn, static_argnums=(1,))
+        jitted = jax.jit(fn, static_argnums=(1,))
+        name = f"lp:{mode}:{backend}:diag={int(bool(diagnostics))}"
+        _JIT_CACHE[key] = register_jit(name, jitted)
     return _JIT_CACHE[key]
 
 
@@ -305,6 +390,9 @@ class PDHGResult:
     iters: int
     primal_res: float
     dual_res: float
+    converged: bool = False
+    tol: float = 0.0
+    diag: object = None
 
 
 @dataclass
@@ -312,30 +400,57 @@ class BatchedPDHGResult:
     """Padded batch solution: x (B,N,M,H+1), A (B,N,U,H), objs (B,).
 
     With heterogeneous stacks, slice each element back to its true (N_i,
-    U_i) before use — ``StackedWindows.unstack`` does this.
+    U_i) before use — ``StackedWindows.unstack`` does this.  ``diag``
+    carries the batched diagnostics curves (leading axis B) when the run
+    asked for them, else None.
     """
     x: np.ndarray
     A: np.ndarray
     objs: np.ndarray
     iters: int
+    diag: object = None
 
 
-def solve_lp_pdhg(inst: JDCRInstance, iters: int = 4000, check_every: int = 200,
-                  tol: float = 2e-3, backend: str = "reference"):
-    x, A = _jitted_kernel(batched=False, backend=backend)(pdhg_data(inst), iters)
-    x = np.asarray(x)
-    A = np.asarray(A)
-    obj = inst.objective(A)
+def pdhg_primal_residual(inst: JDCRInstance, x, A) -> float:
+    """Scaled primal feasibility residual of a fractional (x, A) — the
+    max over memory / max(R), route, A <= x and the one-submodel
+    equality (the same contract the device-side diagnostics sample and
+    ``obs.DEFAULT_TOL`` are calibrated against)."""
     from repro.core.jdcr import check_feasible
     res = check_feasible(inst, x, A, atol=np.inf)
     primal = max(res["memory"] / max(inst.R.max(), 1e-9), res["route"],
                  res["A_le_x"], res["one_submodel"])
+    return float(max(primal, 0.0))
+
+
+def solve_lp_pdhg(inst: JDCRInstance, iters: int = 4000, check_every: int = 200,
+                  tol: float = PDHG_TOL, backend: str = "reference",
+                  diagnostics: bool = False):
+    """One-window PDHG solve.  The result always carries a ``converged``
+    flag (final residual vs ``tol``) instead of silently returning after
+    the fixed iteration budget; ``diagnostics=True`` additionally attaches
+    the device-sampled residual/objective curves (stride =
+    ``check_every``) without changing x/A bits."""
+    out = _jitted_kernel(batched=False, backend=backend,
+                         diagnostics=diagnostics,
+                         diag_stride=check_every)(pdhg_data(inst), iters)
+    x, A = out[0], out[1]
+    diag = ({k: np.asarray(v) for k, v in out[2].items()}
+            if diagnostics else None)
+    x = np.asarray(x)
+    A = np.asarray(A)
+    obj = inst.objective(A)
+    primal = pdhg_primal_residual(inst, x, A)
     return PDHGResult(x=x, A=A, obj=obj, iters=iters,
-                      primal_res=float(max(primal, 0.0)), dual_res=0.0)
+                      primal_res=primal, dual_res=0.0,
+                      converged=bool(primal <= tol), tol=float(tol),
+                      diag=diag)
 
 
 def solve_lp_pdhg_batched(data: PDHGData, iters: int = 4000,
-                          backend: str = "reference") -> BatchedPDHGResult:
+                          backend: str = "reference",
+                          diagnostics: bool = False,
+                          diag_stride: int = DIAG_STRIDE) -> BatchedPDHGResult:
     """Solve a whole stack of windows in ONE vmapped, jitted dispatch.
 
     ``data`` is a :class:`PDHGData` whose every field carries a leading
@@ -344,8 +459,13 @@ def solve_lp_pdhg_batched(data: PDHGData, iters: int = 4000,
     base stations hold A == 0 throughout (``bs_mask``), so padding
     contributes nothing to the einsum.
     """
-    x, A = _jitted_kernel(batched=True, backend=backend)(data, iters)
+    out = _jitted_kernel(batched=True, backend=backend,
+                         diagnostics=diagnostics,
+                         diag_stride=diag_stride)(data, iters)
+    x, A = out[0], out[1]
+    diag = ({k: np.asarray(v) for k, v in out[2].items()}
+            if diagnostics else None)
     x = np.asarray(x)
     A = np.asarray(A)
     objs = np.einsum("bnuh,buh->b", A, np.asarray(data.prec_u))
-    return BatchedPDHGResult(x=x, A=A, objs=objs, iters=iters)
+    return BatchedPDHGResult(x=x, A=A, objs=objs, iters=iters, diag=diag)

@@ -28,6 +28,15 @@ the other paper tables; run standalone with
 the ``repro.scale`` executor (run under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=K``); ``--devices``
 and ``--chunk`` tune the mesh width and streaming chunk.
+
+Observability (``repro.obs``): diagnostics taps are ON by default —
+PDHG residual/convergence columns on offline rows, per-slot cache
+telemetry summaries on online rows — and provably decision-inert
+(``--no-diag`` compiles them out).  Every results JSON gets a sibling
+``*.manifest.json`` (git SHA, jax/device info, seeds, config hash) and
+``*.trace.jsonl`` / ``*.trace.chrome.json`` span exports; render them
+with ``scripts/report.py results/sweep``.  ``--smoke`` runs a 2-window
+offline CI grid into ``results/sweep/ci/``.
 """
 from __future__ import annotations
 
@@ -38,6 +47,7 @@ import numpy as np
 
 from repro.core.cocar import cocar_grid
 from repro.mec.scenario import MECConfig, Scenario, config_grid
+from repro.obs import TRACER, convergence_table, write_manifest
 
 #: Default sweep: 2^4 = 16 variants over the four axes the paper varies.
 #: n_bs values sit close together on purpose — heterogeneous topologies are
@@ -55,7 +65,7 @@ def run_sweep(base: MECConfig = None, axes: dict = None, window: int = 0,
               pdhg_iters: int = 4000, best_of: int = 8, seed: int = 0,
               n_seeds: int = 1, backend: str = "device",
               devices: int = None, chunk_size: int = 0,
-              max_buckets: int = 1):
+              max_buckets: int = 1, diagnostics: bool = False):
     """One CoCaR window per (grid variant × rounding seed), the whole grid
     as ONE fused device dispatch — LP, rounding, repair, trial argmax and
     window metrics all inside the jit (mirroring the ``--online`` grid).
@@ -65,6 +75,12 @@ def run_sweep(base: MECConfig = None, axes: dict = None, window: int = 0,
     ``max_buckets > 1`` opts heterogeneous grids into size-bucketed
     padding (still decision-identical; only the reported ``lp_obj``
     carries ~1e-14 reduction-order slack).
+
+    ``diagnostics=True`` taps the PDHG solver's residual curves inside
+    the jit (``repro.obs``) and adds ``pdhg_final_residual`` /
+    ``pdhg_converged`` columns to every row — decisions stay bit-
+    identical (device/sharded backends only; the host reference loop
+    has no tap).
 
     Returns a list of row dicts (variant-major, seed-minor, in grid
     order); with ``n_seeds > 1`` each row carries its ``rounding_seed``.
@@ -77,7 +93,7 @@ def run_sweep(base: MECConfig = None, axes: dict = None, window: int = 0,
     grid = cocar_grid(insts, seed=seed, pdhg_iters=pdhg_iters,
                       best_of=best_of, n_seeds=n_seeds, backend=backend,
                       devices=devices, chunk_size=chunk_size,
-                      max_buckets=max_buckets)
+                      max_buckets=max_buckets, diagnostics=diagnostics)
     rows = []
     for cfg, per_seed in zip(cfgs, grid):
         for s, (_x, _A, info) in enumerate(per_seed):
@@ -86,6 +102,10 @@ def run_sweep(base: MECConfig = None, axes: dict = None, window: int = 0,
                 row["rounding_seed"] = s
             row["lp_obj"] = info["lp_obj"]
             row.update(info["metrics"])
+            if "lp_diag" in info:
+                summ = info["lp_diag"]["summary"]
+                row["pdhg_final_residual"] = summ["final_residual"]
+                row["pdhg_converged"] = summ["converged"]
             rows.append(row)
     return rows
 
@@ -95,12 +115,16 @@ def run_policy_sweep(base: MECConfig = None, axes: dict = None,
                      best_of: int = 8, seed: int = 0, n_seeds: int = 1,
                      episodes: int = 60, backend: str = "device",
                      devices: int = None, chunk_size: int = 0,
-                     max_buckets: int = 1):
+                     max_buckets: int = 1, diagnostics: bool = False):
     """The paper's Sec. VII-B headline comparison — CoCaR vs SPR³ /
     Greedy / Random / GatMARL — across (grid variants × rounding seeds ×
     policies), every policy's decisions AND the shared evaluation stage in
     ONE fused device dispatch (GatMARL training excepted: host-side,
     cached per topology).
+
+    ``diagnostics=True`` (device/sharded only) taps the CoCaR LP's PDHG
+    residuals per window and attaches a ``summary["convergence"]`` table
+    over the grid; decisions stay bit-identical.
 
     Returns ``(rows, summary)``: one row dict per (variant, seed, policy)
     plus a summary with per-policy grid means and the CoCaR-vs-best-
@@ -118,15 +142,18 @@ def run_policy_sweep(base: MECConfig = None, axes: dict = None,
     scenarios = [Scenario(c) for c in cfgs]
     insts = [sc.instance(window, sc.empty_cache()) for sc in scenarios]
 
+    lp_diag = None
     if backend in ("device", "sharded"):
         from repro.scale import GridSpec, run_grid
 
-        res = run_grid(GridSpec(
+        gr = run_grid(GridSpec(
             kind="policy", insts=insts, seed=seed, n_seeds=n_seeds,
             best_of=best_of, pdhg_iters=pdhg_iters, episodes=episodes,
             backend="vmap" if backend == "device" else "sharded",
             devices=devices, chunk_size=chunk_size,
-            max_buckets=max_buckets)).results
+            max_buckets=max_buckets, diagnostics=diagnostics))
+        res = gr.results
+        lp_diag = gr.stats.get("lp_diag")
         met = _policy_met(res, len(insts), n_seeds)
     elif backend == "host":
         stacked = stack_instances(insts)
@@ -141,7 +168,12 @@ def run_policy_sweep(base: MECConfig = None, axes: dict = None,
         met = _policy_met(host, len(stacked), n_seeds)
     else:
         raise ValueError(f"unknown backend {backend!r}")
-    return _policy_rows(cfgs, axes, met, n_seeds)
+    rows, summary = _policy_rows(cfgs, axes, met, n_seeds)
+    if lp_diag:
+        summary["convergence"] = convergence_table(
+            np.asarray([d["final_residual"] for d in lp_diag]),
+            tol=lp_diag[0]["tol"])
+    return rows, summary
 
 
 def _policy_met(results, n_windows, n_seeds):
@@ -191,10 +223,14 @@ DEFAULT_POLICIES = ("cocar-ol", "lfu")
 def run_online_sweep(base: MECConfig = None, axes: dict = None,
                      traces=DEFAULT_TRACES, policies=DEFAULT_POLICIES,
                      ocfg=None, seed: int = 0, backend: str = "vmap",
-                     devices: int = None, chunk_size: int = 0):
+                     devices: int = None, chunk_size: int = 0,
+                     diagnostics: bool = False):
     """Cross (config grid x trace family x policy), run everything in one
     vmapped scan dispatch (``backend="sharded"`` spreads it across a
-    host-device mesh).  Returns a list of row dicts in grid order."""
+    host-device mesh).  ``diagnostics=True`` taps the per-slot cache
+    telemetry inside the scan (hit rate, downloads in flight, evictions,
+    cache occupancy) and adds summary columns — decisions and QoE stay
+    bit-identical.  Returns a list of row dicts in grid order."""
     from repro.core.online import OnlineConfig
     from repro.traces.engine import run_online_grid
     from repro.traces.registry import make_trace
@@ -212,12 +248,18 @@ def run_online_sweep(base: MECConfig = None, axes: dict = None,
                                  seed=seed))
                 keys.append((cfg, tname, algo))
     results = run_online_grid(jobs, ocfg, backend=backend,
-                              devices=devices, chunk_size=chunk_size)
+                              devices=devices, chunk_size=chunk_size,
+                              diagnostics=diagnostics)
     rows = []
     for (cfg, tname, algo), res in zip(keys, results):
         row = {k: getattr(cfg, k) for k in axes}
         row.update(trace=tname, algo=algo, avg_qoe=res["avg_qoe"],
                    hit_rate=res["hit_rate"])
+        if "diagnostics" in res:
+            d = res["diagnostics"]
+            row["mean_dl_in_flight"] = float(np.mean(d["dl_in_flight"]))
+            row["evictions"] = float(np.sum(d["evictions"]))
+            row["final_cache_mb"] = float(d["cache_mb"][-1])
         rows.append(row)
     return rows
 
@@ -237,37 +279,77 @@ def format_table(rows) -> str:
     return "\n".join(lines)
 
 
+#: CI smoke grid: two small offline windows at the smallest iteration
+#: budget whose final PDHG residuals all clear ``obs.DEFAULT_TOL``
+#: (measured: max final residual 6.6e-3 at 3000 iterations, tol 1e-2).
+SMOKE_AXES = {"zipf": (0.4, 0.8)}
+SMOKE_ITERS = 3000
+
+
 def main(online: bool = False, backend: str = "device", n_seeds: int = 1,
          policies: bool = False, devices: int = None, chunk_size: int = 0,
-         max_buckets: int = 1):
+         max_buckets: int = 1, diagnostics: bool = True,
+         smoke: bool = False):
     payload = None
-    if online:
-        rows = run_online_sweep(
-            backend="sharded" if backend == "sharded" else "vmap",
-            devices=devices, chunk_size=chunk_size)
-        name = "online_grid.json"
-    elif policies:
-        rows, summary = run_policy_sweep(backend=backend, n_seeds=n_seeds,
-                                         devices=devices,
-                                         chunk_size=chunk_size,
-                                         max_buckets=max_buckets)
-        name = "policy_grid.json"
-        payload = {"rows": rows, "summary": summary}
-    else:
-        rows = run_sweep(backend=backend, n_seeds=n_seeds,
-                         devices=devices, chunk_size=chunk_size,
-                         max_buckets=max_buckets)
-        name = "grid.json"
+    kind = "online" if online else "policy" if policies else "offline"
+    out = pathlib.Path("results") / "sweep" / ("ci" if smoke else "")
+    with TRACER.span("sweep", kind=kind, backend=backend, smoke=smoke,
+                     diagnostics=diagnostics):
+        if smoke:
+            rows = run_sweep(base=MECConfig(n_users=20), axes=SMOKE_AXES,
+                             pdhg_iters=SMOKE_ITERS, backend=backend,
+                             n_seeds=n_seeds, devices=devices,
+                             chunk_size=chunk_size,
+                             diagnostics=diagnostics)
+            name = "grid.json"
+        elif online:
+            rows = run_online_sweep(
+                backend="sharded" if backend == "sharded" else "vmap",
+                devices=devices, chunk_size=chunk_size,
+                diagnostics=diagnostics)
+            name = "online_grid.json"
+        elif policies:
+            rows, summary = run_policy_sweep(backend=backend,
+                                             n_seeds=n_seeds,
+                                             devices=devices,
+                                             chunk_size=chunk_size,
+                                             max_buckets=max_buckets,
+                                             diagnostics=diagnostics)
+            name = "policy_grid.json"
+            payload = {"rows": rows, "summary": summary}
+        else:
+            rows = run_sweep(backend=backend, n_seeds=n_seeds,
+                             devices=devices, chunk_size=chunk_size,
+                             max_buckets=max_buckets,
+                             diagnostics=diagnostics)
+            name = "grid.json"
     print(format_table(rows))
-    out = pathlib.Path("results") / "sweep"
     out.mkdir(parents=True, exist_ok=True)
     path = out / name
     path.write_text(json.dumps(payload if payload is not None else rows,
                                indent=1, default=float))
+    write_manifest(path,
+                   config=dict(kind=kind, backend=backend,
+                               n_seeds=n_seeds, devices=devices,
+                               chunk_size=chunk_size,
+                               max_buckets=max_buckets,
+                               diagnostics=diagnostics, smoke=smoke),
+                   seeds={"seed": 0, "n_seeds": n_seeds})
+    TRACER.export_jsonl(path.with_name(path.stem + ".trace.jsonl"))
+    TRACER.export_chrome(path.with_name(path.stem + ".trace.chrome.json"))
     if policies:
         s = payload["summary"]
         print(f"\nCoCaR vs best baseline ({s['best_baseline']}): "
               f"{s['ratio']:.2f}x avg served precision")
+        if "convergence" in s:
+            c = s["convergence"]
+            print(f"pdhg convergence: "
+                  f"{c['n_windows'] - c['n_not_converged']}/"
+                  f"{c['n_windows']} windows <= tol {c['tol']:g}")
+    elif diagnostics and not online and backend != "host":
+        bad = sum(1 for r in rows if not r.get("pdhg_converged", True))
+        print(f"\npdhg convergence: {len(rows) - bad}/{len(rows)} "
+              f"windows converged")
     print(f"\n{len(rows)} rows -> {path}")
     return rows
 
@@ -297,15 +379,25 @@ if __name__ == "__main__":
                          "(1 = classic single padded shape)")
     ap.add_argument("--seeds", type=int, default=1,
                     help="rounding seeds per variant (offline only)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny offline CI grid (2 windows, converging "
+                         "iteration budget) written to results/sweep/ci/")
+    ap.add_argument("--no-diag", action="store_true",
+                    help="compile the solver/scan diagnostics taps out "
+                         "(decisions are bit-identical either way)")
     args = ap.parse_args()
     if args.host and args.shard:
         ap.error("--host and --shard are mutually exclusive")
     if args.devices is not None and not args.shard:
         ap.error("--devices requires --shard (a plain run would "
                  "silently ignore it)")
+    if args.smoke and (args.online or args.policies or args.host):
+        ap.error("--smoke is an offline device/sharded grid; it takes "
+                 "none of --online/--policies/--host")
     main(online=args.online,
          backend=("host" if args.host
                   else "sharded" if args.shard else "device"),
          n_seeds=args.seeds, policies=args.policies,
          devices=args.devices, chunk_size=args.chunk,
-         max_buckets=args.buckets)
+         max_buckets=args.buckets, diagnostics=not args.no_diag,
+         smoke=args.smoke)

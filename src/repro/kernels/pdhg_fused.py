@@ -104,12 +104,15 @@ def _constants(data, dtype):
     tAT = tau_A * T                                    # folded prox tensors
     tAL = tau_A * L
 
+    # bs_mask / u_mask / prec_hu are read only by the diagnostics sampler
+    # (not listed in the Pallas const_keys — _fused_step never touches them)
     return dict(sizes=sizes, onehot_mu=onehot_mu, R=R, ddl=ddl, s_u=s_u,
                 T=T, L=L, T_t=T_t, L_t=L_t,
                 sig_eq=sig_eq, sig_mem=sig_mem, sig_route=sig_route,
                 sig_lat=sig_lat, sig_load=sig_load, sig_ax=sig_ax,
                 tau_x=tau_x, tau_A=tau_A, tau_prec=tau_prec,
-                tAT=tAT, tAL=tAL, dims=(N, M, H, U))
+                tAT=tAT, tAL=tAL, bs_mask=bs_mask, u_mask=u_mask,
+                prec_hu=prec_hu, dims=(N, M, H, U))
 
 
 def _apply_K(c, x, A):
@@ -189,6 +192,31 @@ def _cast_state(state, dtype):
     import jax.numpy as jnp
 
     return tuple(jnp.asarray(v, dtype) for v in state)
+
+
+def _diag_sample(c, state):
+    """(primal residual, dual displacement, objective) of the current
+    fused state, cast to float64 — the same masked residual contract as
+    the reference tap in ``repro.core.lp._pdhg_kernel``, evaluated in
+    the (N, H, U) layout.  Pure: never perturbs the carried state."""
+    import jax.numpy as jnp
+
+    f64 = _f64()
+    x, A = state[0], state[1]
+    y_eq, y_mem, y_route, _, _, y_ax = _apply_K(c, x, A)
+    bs = c["bs_mask"] > 0
+    um = c["u_mask"] > 0
+    r_eq = jnp.max(jnp.where(bs[:, None], jnp.abs(y_eq), 0.0))
+    r_mem = jnp.max(jnp.where(bs, y_mem, -jnp.inf)) \
+        / jnp.maximum(c["R"].max(), 1e-9)
+    r_route = jnp.max(jnp.where(um, y_route, -jnp.inf))
+    primal = jnp.maximum(
+        jnp.maximum(jnp.maximum(r_eq, r_mem),
+                    jnp.maximum(r_route, jnp.max(y_ax))), 0.0)
+    x2, A2 = _fused_step(c, state)[:2]
+    dual = jnp.maximum(jnp.abs(x2 - x).max(), jnp.abs(A2 - A).max())
+    obj = (jnp.asarray(A, f64) * jnp.asarray(c["prec_hu"], f64)[None]).sum()
+    return jnp.asarray(primal, f64), jnp.asarray(dual, f64), obj
 
 
 def _f64():
@@ -327,7 +355,8 @@ def _vmem(shape, dtype):
 
 def pdhg_fused(data, iters: int, polish: int = POLISH_TAIL,
                engine: str = "auto", block: int = PALLAS_BLOCK,
-               interpret=None):
+               interpret=None, diagnostics: bool = False,
+               diag_stride: int = 50):
     """The fused mixed-precision PDHG solve of one (padded) window.
 
     Runs ``iters - polish`` float32 sweep iterations then ``polish``
@@ -339,6 +368,16 @@ def pdhg_fused(data, iters: int, polish: int = POLISH_TAIL,
       * ``"scan"``  — force the XLA scan realization;
       * ``"pallas"`` — force the Pallas kernel (interpret mode is
         auto-selected off-TPU, or pass ``interpret=`` explicitly).
+
+    ``diagnostics=True`` re-expresses each precision phase as the same
+    phase calls segmented at ``diag_stride`` boundaries (pure function
+    composition — the scan engine composes bit-exactly, which
+    tests/test_obs.py asserts; the Pallas engine is exact whenever
+    ``diag_stride`` is a multiple of ``block``, else remainder blocks
+    compile separately and may regroup FMAs at dtype-ulp scale) and
+    returns ``(x, A, diag)`` where ``diag`` carries float64 residual /
+    objective curves plus ``polish_delta``, the max coordinate movement
+    of the f32→f64 polish tail.
 
     Traceable (jit/vmap-safe) for fixed static ``iters``/``polish``.
     """
@@ -359,14 +398,50 @@ def pdhg_fused(data, iters: int, polish: int = POLISH_TAIL,
         _pallas_phase, block=block, interpret=interpret)
 
     f64 = _f64()
+    if not diagnostics:
+        if sweep:
+            _, state = _init_state(data, jnp.float32)
+            state = phase(data, state, sweep, jnp.float32)
+        else:
+            _, state = _init_state(data, f64)
+        state = phase(data, state, polish, f64)
+        N, M, H, U = _constants(data, f64)["dims"]
+        return _finalize(state, (N, M, H, U))
+
+    stride = max(1, int(diag_stride))
+    c64 = _constants(data, f64)
+    samples = []  # (sampled iteration, primal, dual, obj)
     if sweep:
+        c32 = _constants(data, jnp.float32)
         _, state = _init_state(data, jnp.float32)
-        state = phase(data, state, sweep, jnp.float32)
+        n1, r1 = divmod(sweep, stride)
+        for s in range(n1):
+            state = phase(data, state, stride, jnp.float32)
+            samples.append(((s + 1) * stride,) + _diag_sample(c32, state))
+        if r1:
+            state = phase(data, state, r1, jnp.float32)
+            samples.append((sweep,) + _diag_sample(c32, state))
     else:
         _, state = _init_state(data, f64)
-    state = phase(data, state, polish, f64)
-    N, M, H, U = _constants(data, f64)["dims"]
-    return _finalize(state, (N, M, H, U))
+    x_sw, A_sw = _finalize(state, c64["dims"])
+    n2, r2 = divmod(polish, stride)
+    for s in range(n2):
+        state = phase(data, state, stride, f64)
+        samples.append((sweep + (s + 1) * stride,) + _diag_sample(c64, state))
+    # unconditional, mirroring the diag-off path: a zero-length phase
+    # call still applies the f64 cast
+    state = phase(data, state, r2, f64)
+    if r2 or not samples:
+        samples.append((iters,) + _diag_sample(c64, state))
+    x, A = _finalize(state, c64["dims"])
+    polish_delta = jnp.maximum(jnp.abs(x - x_sw).max(),
+                               jnp.abs(A - A_sw).max())
+    diag = {"iters": jnp.asarray([s[0] for s in samples], jnp.int32),
+            "primal_res": jnp.stack([s[1] for s in samples]),
+            "dual_res": jnp.stack([s[2] for s in samples]),
+            "obj": jnp.stack([s[3] for s in samples]),
+            "polish_delta": polish_delta}
+    return x, A, diag
 
 
 def fused_vs_reference_gap(data, iters: int, polish: int = POLISH_TAIL):

@@ -1,0 +1,28 @@
+"""``repro.obs`` — the observability layer: host-side span tracing,
+retrace accounting, run manifests, and jit-safe solver/engine
+diagnostics summaries.
+
+Three parts (docs/algorithms.md Sec. 11):
+
+  * :mod:`repro.obs.tracing` — ``Span``/``Tracer`` built on the
+    monotonic ``time.perf_counter``, with JSONL + chrome://tracing
+    export and a registry of jitted entry points whose compile-cache
+    sizes turn into per-span retrace counts;
+  * :mod:`repro.obs.manifest` — ``run_manifest``/``write_manifest``:
+    git SHA, jax/device info, x64 flags, seeds, and a config hash next
+    to every emitted results file;
+  * :mod:`repro.obs.diagnostics` — host-side summaries of the jit-safe
+    diagnostics pytrees the kernels emit (``diagnostics=True`` through
+    ``repro.core.lp``, ``repro.kernels.pdhg_fused``,
+    ``repro.traces.engine`` and the ``repro.scale`` executor).
+
+This package imports neither jax nor any ``repro`` sibling at module
+load, so every dispatch site can depend on it without import cycles or
+early device initialization.
+"""
+from repro.obs.diagnostics import (DEFAULT_TOL, convergence_table,
+                                   lp_diag_summary)
+from repro.obs.manifest import config_hash, run_manifest, write_manifest
+from repro.obs.tracing import (TRACER, Span, Tracer, jit_cache_sizes,
+                               register_jit, retrace_snapshot,
+                               retraces_since, span, total_retraces_since)

@@ -1,0 +1,182 @@
+"""Host-side tracing: nested spans on the monotonic clock + retrace
+accounting for jitted entry points.
+
+``time.time()`` is not monotonic (NTP can step it backwards mid-run),
+so every duration here comes from ``time.perf_counter``.  A ``Tracer``
+records a tree of :class:`Span`\\ s — one per ``with tracer.span(...)``
+block — and exports them as JSONL (one span per line) or in the
+chrome://tracing ``traceEvents`` format (load the file in
+``chrome://tracing`` / Perfetto to see the dispatch timeline).
+
+Retrace accounting: dispatch sites register their jitted callables
+under stable names (:func:`register_jit`); each span snapshots the
+per-entry-point compile-cache sizes (``fn._cache_size()``) on entry and
+records the delta on exit as ``Span.retraces``.  A warm dispatch spans
+``retraces == 0``; a span that compiled records how many new
+executables it cost — which is how the report separates compile time
+from execute time, and how ``tests/test_obs.py`` turns "repeat sweeps
+retrace nothing" into an enforced invariant.
+
+No jax import happens at module load (or ever, unless a registered jit
+is inspected) — safe to import from anywhere, including before
+``XLA_FLAGS`` is set.
+"""
+from __future__ import annotations
+
+import json
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+# ---------------------------------------------------------------------------
+# jitted entry point registry (retrace accounting)
+# ---------------------------------------------------------------------------
+
+_JIT_REGISTRY: dict = {}
+
+
+def register_jit(name: str, fn):
+    """Register a jitted callable under a stable name so its compile
+    cache can be watched for retraces.  Idempotent; returns ``fn``."""
+    _JIT_REGISTRY[str(name)] = fn
+    return fn
+
+
+def jit_cache_sizes() -> dict:
+    """{registered name: current compile-cache size}.  Entries whose
+    callable does not expose ``_cache_size`` report -1."""
+    out = {}
+    for name, fn in _JIT_REGISTRY.items():
+        size = fn._cache_size() if hasattr(fn, "_cache_size") else -1
+        out[name] = int(size)
+    return out
+
+
+def retrace_snapshot() -> dict:
+    """A point-in-time copy of :func:`jit_cache_sizes` — pass it to
+    :func:`retraces_since` after the work you want to account."""
+    return jit_cache_sizes()
+
+
+def retraces_since(snapshot: dict) -> dict:
+    """{name: newly compiled executables since ``snapshot``} — only
+    positive deltas; entry points registered after the snapshot count
+    their full cache size."""
+    now = jit_cache_sizes()
+    out = {}
+    for name, size in now.items():
+        delta = size - snapshot.get(name, 0)
+        if delta > 0 and size >= 0:
+            out[name] = delta
+    return out
+
+
+def total_retraces_since(snapshot: dict) -> int:
+    return sum(retraces_since(snapshot).values())
+
+
+# ---------------------------------------------------------------------------
+# spans
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Span:
+    """One timed block: name, perf_counter start/duration, nesting
+    (depth + parent index into the tracer's span list), free-form
+    attrs, and the retrace count its work caused."""
+    name: str
+    t0: float
+    seconds: float = 0.0
+    depth: int = 0
+    parent: int = -1
+    attrs: dict = field(default_factory=dict)
+    retraces: int = 0
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "t0": self.t0,
+                "seconds": self.seconds, "depth": self.depth,
+                "parent": self.parent, "retraces": self.retraces,
+                "attrs": self.attrs}
+
+
+class Tracer:
+    """Records a tree of spans; export as JSONL or chrome://tracing."""
+
+    def __init__(self):
+        self._spans: list[Span] = []
+        self._stack: list[int] = []
+
+    @contextmanager
+    def span(self, name: str, **attrs):
+        """Time a block.  Yields the (open) :class:`Span`; its
+        ``seconds`` and ``retraces`` are filled when the block exits."""
+        sp = Span(name=str(name), t0=time.perf_counter(),
+                  depth=len(self._stack),
+                  parent=self._stack[-1] if self._stack else -1,
+                  attrs=dict(attrs))
+        idx = len(self._spans)
+        self._spans.append(sp)
+        self._stack.append(idx)
+        snap = retrace_snapshot()
+        try:
+            yield sp
+        finally:
+            sp.seconds = time.perf_counter() - sp.t0
+            sp.retraces = total_retraces_since(snap)
+            self._stack.pop()
+
+    @property
+    def spans(self) -> list:
+        return list(self._spans)
+
+    def reset(self):
+        self._spans.clear()
+        self._stack.clear()
+
+    def summary(self, top: int = 10) -> dict:
+        """Aggregate by span name (count / total / max seconds /
+        retraces) plus the ``top`` slowest individual spans."""
+        agg: dict = {}
+        for sp in self._spans:
+            a = agg.setdefault(sp.name, {"count": 0, "total_s": 0.0,
+                                         "max_s": 0.0, "retraces": 0})
+            a["count"] += 1
+            a["total_s"] += sp.seconds
+            a["max_s"] = max(a["max_s"], sp.seconds)
+            a["retraces"] += sp.retraces
+        slowest = sorted(self._spans, key=lambda s: -s.seconds)[:top]
+        return {"by_name": agg,
+                "slowest": [s.to_dict() for s in slowest]}
+
+    def export_jsonl(self, path):
+        """One span per line, in start order."""
+        lines = [json.dumps(sp.to_dict()) for sp in self._spans]
+        with open(path, "w") as f:
+            f.write("\n".join(lines) + ("\n" if lines else ""))
+        return path
+
+    def export_chrome(self, path):
+        """chrome://tracing ``traceEvents`` (complete "X" events,
+        microsecond timestamps relative to the first span)."""
+        epoch = self._spans[0].t0 if self._spans else 0.0
+        events = [{"name": sp.name, "cat": "obs", "ph": "X", "pid": 0,
+                   "tid": sp.depth,
+                   "ts": (sp.t0 - epoch) * 1e6,
+                   "dur": sp.seconds * 1e6,
+                   "args": {**sp.attrs, "retraces": sp.retraces}}
+                  for sp in self._spans]
+        with open(path, "w") as f:
+            json.dump({"traceEvents": events,
+                       "displayTimeUnit": "ms"}, f)
+        return path
+
+
+#: The process-wide default tracer every dispatch site records into.
+TRACER = Tracer()
+
+
+@contextmanager
+def span(name: str, **attrs):
+    """``with obs.span("solve"): ...`` — sugar for ``TRACER.span``."""
+    with TRACER.span(name, **attrs) as sp:
+        yield sp

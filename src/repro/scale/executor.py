@@ -51,12 +51,12 @@ the same :class:`~repro.scale.buckets.BucketPlan` key retrace nothing.
 """
 from __future__ import annotations
 
-import time
 import warnings
 from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.obs import tracing as OT
 from repro.scale.buckets import plan_buckets
 
 GRID_KINDS = ("offline", "policy", "online")
@@ -91,6 +91,7 @@ class GridSpec:
     round_users_to: int = 1
     rng: str = "stacked"         # uniform-draw scheme, see run_grid
     progress: object = None      # callable(dict) per finished chunk
+    diagnostics: bool = False    # jit-safe solver/engine telemetry tap
 
 
 @dataclass
@@ -140,7 +141,9 @@ def compiled_cache_stats():
 def _compile(kind, mesh, n_args, make_inner, *statics):
     """Wrap ``make_inner()`` (a vmapped kernel over the batch axis) in
     shard_map over the mesh's "data" axis (identity when ``mesh`` is
-    None), jit it with every array argument donated, and cache it."""
+    None), jit it with every array argument donated, and cache it.
+    Every compiled entry point is registered with ``repro.obs`` so chunk
+    spans count its retraces."""
     key = (kind, _mesh_key(mesh)) + tuple(statics)
     if key not in _COMPILED:
         import jax
@@ -153,7 +156,8 @@ def _compile(kind, mesh, n_args, make_inner, *statics):
             s = P("data")
             fn = shard_map(fn, mesh=mesh, in_specs=(s,) * n_args,
                            out_specs=s, check_rep=False)
-        _COMPILED[key] = jax.jit(fn, donate_argnums=tuple(range(n_args)))
+        _COMPILED[key] = OT.register_jit(
+            f"scale:{key}", jax.jit(fn, donate_argnums=tuple(range(n_args))))
     return _COMPILED[key]
 
 
@@ -215,23 +219,29 @@ def _run_chunks(spec: GridSpec, mesh, fn, args, B: int, stats: dict,
         else:                                     # no identity row-copy
             chunk_args = make(take)
         in_bytes = sum(_nbytes(a) for a in chunk_args)
-        t0 = time.time()
-        with enable_x64():
-            if sharding is not None:
-                chunk_args = tuple(jax.device_put(a, sharding)
-                                   for a in chunk_args)
-            else:
-                chunk_args = tuple(jax.device_put(a) for a in chunk_args)
-            with warnings.catch_warnings():
-                # donation is best-effort: only inputs whose shape/layout
-                # matches an output can be reused (the online state is;
-                # most static tensors are not) — the mismatches are
-                # expected, not a bug
-                warnings.filterwarnings(
-                    "ignore", message="Some donated buffers were not usable")
-                out = fn(*chunk_args)
-            out = jax.tree.map(np.asarray, out)
-        dt = time.time() - t0
+        pad_rows = int(chunk - (min(start + chunk, B) - start))
+        with OT.TRACER.span("chunk", kind=spec.kind,
+                            bucket=str(bucket_key), chunk=ci,
+                            n_chunks=n_chunks, batch=int(len(take)),
+                            pad_rows=pad_rows, in_bytes=in_bytes) as sp:
+            with enable_x64():
+                if sharding is not None:
+                    chunk_args = tuple(jax.device_put(a, sharding)
+                                       for a in chunk_args)
+                else:
+                    chunk_args = tuple(jax.device_put(a)
+                                       for a in chunk_args)
+                with warnings.catch_warnings():
+                    # donation is best-effort: only inputs whose shape/
+                    # layout matches an output can be reused (the online
+                    # state is; most static tensors are not) — the
+                    # mismatches are expected, not a bug
+                    warnings.filterwarnings(
+                        "ignore",
+                        message="Some donated buffers were not usable")
+                    out = fn(*chunk_args)
+                out = jax.tree.map(np.asarray, out)
+        dt = sp.seconds
         outs.append(out)
         stats["chunks"] = stats.get("chunks", 0) + 1
         stats["peak_chunk_in_bytes"] = max(
@@ -240,7 +250,8 @@ def _run_chunks(spec: GridSpec, mesh, fn, args, B: int, stats: dict,
         if spec.progress is not None:
             spec.progress({"bucket": bucket_key, "chunk": ci,
                            "n_chunks": n_chunks, "batch": int(len(take)),
-                           "in_bytes": in_bytes, "seconds": dt})
+                           "in_bytes": in_bytes, "seconds": dt,
+                           "retraces": sp.retraces})
     if len(outs) == 1:
         out = outs[0]
     else:
@@ -338,7 +349,8 @@ def _run_offline(spec: GridSpec, mesh, stats):
                         np.stack([_fit_axes(u, (1, Nb), (2, Ub))
                                   for u in ups]))
         fn = _compile("offline", mesh, 3, _offline_inner(spec),
-                      int(spec.pdhg_iters), S, spec.lp_backend)
+                      int(spec.pdhg_iters), S, spec.lp_backend,
+                      bool(spec.diagnostics))
         out = _run_chunks(spec, mesh, fn, args,
                           len(idx), stats, bucket_key=bucket.key)
         per = CC._unstack_device(stacked, out, S)
@@ -355,9 +367,11 @@ def _offline_inner(spec: GridSpec):
 
         iters, n_seeds = int(spec.pdhg_iters), int(spec.n_seeds)
         lp_backend = spec.lp_backend
+        diagnostics = bool(spec.diagnostics)
         return jax.vmap(
             lambda d, uc, up: _pipeline_kernel(d, uc, up, iters, n_seeds,
-                                               backend=lp_backend))
+                                               backend=lp_backend,
+                                               diagnostics=diagnostics))
     return make
 
 
@@ -390,6 +404,7 @@ def _run_policy(spec: GridSpec, mesh, stats):
 
     results = {p: [None] * B for p in CC.OFFLINE_POLICIES}
     lp_obj = [None] * B
+    lp_diag = [None] * B if spec.diagnostics else None
     for bucket in plan.buckets:
         idx = np.asarray(bucket.indices)
         Nb, Ub = bucket.n_bs, bucket.n_users
@@ -417,12 +432,19 @@ def _run_policy(spec: GridSpec, mesh, stats):
                 return ((_take_rows(data, take),) + us
                         + tuple(_take_rows(g, take) for g in gat))
         fn = _compile("policy", mesh, 11, _policy_inner(spec),
-                      int(spec.pdhg_iters), S, spec.lp_backend)
+                      int(spec.pdhg_iters), S, spec.lp_backend,
+                      bool(spec.diagnostics))
         out = _run_chunks(spec, mesh, fn, args, len(idx), stats,
                           bucket_key=bucket.key)
         for j, i in enumerate(idx):
             inst = insts[int(i)]
             lp_obj[int(i)] = float(out["lp_obj"][j])
+            if lp_diag is not None:
+                from repro.obs.diagnostics import lp_diag_summary
+
+                curves = {k: np.asarray(v[j])
+                          for k, v in out["lp_diag"].items()}
+                lp_diag[int(i)] = lp_diag_summary(curves)
             for p in CC.OFFLINE_POLICIES:
                 results[p][int(i)] = [
                     (out[p]["x"][j, s, :inst.N],
@@ -431,6 +453,10 @@ def _run_policy(spec: GridSpec, mesh, stats):
                       for k, v in out[p]["metrics"].items()})
                     for s in range(S)]
     stats["lp_obj"] = lp_obj
+    if lp_diag is not None:
+        # JSON-safe per-window convergence summaries (curves stay on the
+        # offline kind, which returns them per window in full)
+        stats["lp_diag"] = lp_diag
     return results
 
 
@@ -442,9 +468,11 @@ def _policy_inner(spec: GridSpec):
 
         iters, n_seeds = int(spec.pdhg_iters), int(spec.n_seeds)
         lp_backend = spec.lp_backend
+        diagnostics = bool(spec.diagnostics)
         return jax.vmap(
             lambda *a: _policy_kernel(*a, iters, n_seeds,
-                                      backend=lp_backend))
+                                      backend=lp_backend,
+                                      diagnostics=diagnostics))
     return make
 
 
@@ -486,9 +514,11 @@ def _run_online(spec: GridSpec, mesh, stats):
                 np.stack([pl["stream"].perms for pl in pls]),
                 np.stack([pl["stream"].u_shrink for pl in pls]),
                 np.asarray([pl["policy"] for pl in pls]))
-        fn = _compile("online", mesh, 8, _online_inner)
-        stF, qoe, hits = _run_chunks(spec, mesh, fn, args, len(idx),
-                                     stats, bucket_key=key[0])
+        fn = _compile("online", mesh, 8,
+                      _online_inner(bool(spec.diagnostics)),
+                      bool(spec.diagnostics))
+        stF, qoe, hits, diag = _run_chunks(spec, mesh, fn, args, len(idx),
+                                           stats, bucket_key=key[0])
         for j, i in enumerate(idx):
             tot = max(pls[j]["total"], 1.0)
             results[int(i)] = {
@@ -498,15 +528,23 @@ def _run_online(spec: GridSpec, mesh, stats):
                 "slot_hits": hits[j],
                 "final_state": TE.OnlineState(*(x[j] for x in stF)),
             }
+            if spec.diagnostics:
+                results[int(i)]["diagnostics"] = {
+                    k: np.asarray(v[j]) for k, v in diag.items()}
     return results
 
 
-def _online_inner():
-    import jax
+def _online_inner(diagnostics: bool = False):
+    def make():
+        import functools
 
-    from repro.traces.engine import _scan_run
+        import jax
 
-    return jax.vmap(_scan_run)
+        from repro.traces.engine import _scan_run
+
+        return jax.vmap(functools.partial(_scan_run,
+                                          diagnostics=diagnostics))
+    return make
 
 
 # ---------------------------------------------------------------------------
@@ -540,9 +578,12 @@ def run_grid(spec: GridSpec) -> GridResult:
     mesh = _mesh_of(spec)
     stats = {"kind": spec.kind, "backend": spec.backend,
              "devices": 1 if mesh is None else int(mesh.devices.size)}
-    t0 = time.time()
     runner = {"offline": _run_offline, "policy": _run_policy,
               "online": _run_online}[spec.kind]
-    results = runner(spec, mesh, stats)
-    stats["seconds"] = time.time() - t0
+    with OT.TRACER.span("run_grid", kind=spec.kind, backend=spec.backend,
+                        devices=stats["devices"],
+                        diagnostics=bool(spec.diagnostics)) as sp:
+        results = runner(spec, mesh, stats)
+    stats["seconds"] = sp.seconds
+    stats["retraces"] = sp.retraces
     return GridResult(results=results, stats=stats)

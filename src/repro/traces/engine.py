@@ -372,8 +372,14 @@ def _random_step(p, st, n, u_m, perm, u_shr):
 # the scan
 # ---------------------------------------------------------------------------
 
-def _slot_step(p, policy, st, xs):
-    """One slot: downloads -> routing/QoE -> history push -> policy."""
+def _slot_step(p, policy, st, xs, diagnostics: bool = False):
+    """One slot: downloads -> routing/QoE -> history push -> policy.
+
+    With ``diagnostics`` (static) the emission grows a per-slot telemetry
+    dict — cache-hit rate, downloads in flight, evictions this slot,
+    cached MB — computed purely from values the step already produces, so
+    the state trajectory (and every decision) is bit-identical either
+    way; off, the dict is empty and compiles out entirely."""
     import jax
     import jax.numpy as jnp
 
@@ -383,6 +389,7 @@ def _slot_step(p, policy, st, xs):
     qoe = (counts * best).sum()
     hits = (counts * (best > 0)).sum()
     st = st._replace(hist=jnp.concatenate([st.hist[1:], counts[None]]))
+    lvl_before = st.lvl
     rounds = ns.shape[0]
     js = jnp.arange(rounds)
 
@@ -399,27 +406,44 @@ def _slot_step(p, policy, st, xs):
         rounds_scan(lambda s, j: _random_step(p, s, ns[j], u_model[j],
                                               perms[j], u_shrink[j])),
     ], st)
-    return st, (qoe, hits)
+    diag = {}
+    if diagnostics:
+        ms = jnp.arange(st.lvl.shape[-1])
+        diag = {
+            "hit_rate": hits / jnp.maximum(counts.sum(), 1.0),
+            "dl_in_flight": (st.O.sum(-1) > 0).sum(),
+            "evictions": (st.lvl < lvl_before).sum(),
+            "cache_mb": p.sizes[ms[None, :], st.lvl].sum(),
+        }
+    return st, (qoe, hits, diag)
 
 
-def _scan_run(p, st0, counts, ns, u_model, perms, u_shrink, policy):
+def _scan_run(p, st0, counts, ns, u_model, perms, u_shrink, policy,
+              diagnostics: bool = False):
+    """Whole-trace scan.  Always returns ``(stF, qoe, hits, diag)``;
+    ``diag`` is a dict of per-slot curves when ``diagnostics`` (static)
+    is on, else the empty dict (nothing extra compiled or carried)."""
     import jax
 
     def step(st, xs):
-        return _slot_step(p, policy, st, xs)
+        return _slot_step(p, policy, st, xs, diagnostics=diagnostics)
 
-    stF, (qoe, hits) = jax.lax.scan(step, st0,
-                                    (counts, ns, u_model, perms, u_shrink))
-    return stF, qoe, hits
+    stF, (qoe, hits, diag) = jax.lax.scan(
+        step, st0, (counts, ns, u_model, perms, u_shrink))
+    return stF, qoe, hits, diag
 
 
 @functools.cache
-def _compiled():
+def _compiled(diagnostics: bool = False):
     """The single-scenario scan (``run_scan``).  Grid runs go through the
     ``repro.scale`` executor, which jits its own vmapped ``_scan_run``."""
     import jax
 
-    return jax.jit(_scan_run)
+    from repro.obs.tracing import register_jit
+
+    fn = functools.partial(_scan_run, diagnostics=diagnostics)
+    return register_jit(f"online:scan:diag={int(bool(diagnostics))}",
+                        jax.jit(fn))
 
 
 def _policy_id(algo: str) -> int:
@@ -431,14 +455,17 @@ def _policy_id(algo: str) -> int:
 
 
 def run_scan(params: OnlineParams, counts, stream: DecisionStream,
-             algo: str = "cocar-ol", dT_past: int = 10):
+             algo: str = "cocar-ol", dT_past: int = 10,
+             diagnostics: bool = False):
     """One scenario through the compiled scan.  Returns the summary dict of
-    ``run_online`` plus per-slot arrays and the final state."""
+    ``run_online`` plus per-slot arrays and the final state — and, with
+    ``diagnostics``, the engine's per-slot telemetry curves (decision-
+    inert: same compiled step math, extra emissions only)."""
     from jax.experimental import enable_x64
 
     st0 = init_state(params, dT_past)
     with enable_x64():
-        stF, qoe, hits = _compiled()(
+        stF, qoe, hits, diag = _compiled(bool(diagnostics))(
             params, st0, np.asarray(counts, np.float64),
             stream.adjust_ns, stream.u_model, stream.perms, stream.u_shrink,
             _policy_id(algo))
@@ -446,17 +473,21 @@ def run_scan(params: OnlineParams, counts, stream: DecisionStream,
     # re-enter jnp outside the x64 context and downcast to f32
     qoe, hits = np.asarray(qoe), np.asarray(hits)
     total = float(np.asarray(counts).sum())
-    return {
+    out = {
         "avg_qoe": float(qoe.sum()) / max(total, 1.0),
         "hit_rate": float(hits.sum()) / max(total, 1.0),
         "slot_qoe": qoe,
         "slot_hits": hits,
         "final_state": OnlineState(*(np.asarray(x) for x in stF)),
     }
+    if diagnostics:
+        out["diagnostics"] = {k: np.asarray(v) for k, v in diag.items()}
+    return out
 
 
 def run_online_scan(cfg, ocfg, algo: str = "cocar-ol", seed: int = 0,
-                    trace=None, stream: DecisionStream = None):
+                    trace=None, stream: DecisionStream = None,
+                    diagnostics: bool = False):
     """Drop-in scan-engine counterpart of ``online.run_online``."""
     from dataclasses import replace
 
@@ -468,7 +499,8 @@ def run_online_scan(cfg, ocfg, algo: str = "cocar-ol", seed: int = 0,
     stream = stream or default_stream(cfg, ocfg, seed)
     params = make_params(cfg, ocfg)
     counts = trace.counts(cfg.n_bs, cfg.n_models)
-    return run_scan(params, counts, stream, algo, dT_past=ocfg.dT_past)
+    return run_scan(params, counts, stream, algo, dT_past=ocfg.dT_past,
+                    diagnostics=diagnostics)
 
 
 def grid_payloads(jobs, ocfg):
@@ -503,7 +535,8 @@ def grid_payloads(jobs, ocfg):
 
 
 def run_online_grid(jobs, ocfg, backend: str = "vmap",
-                    devices: int = None, chunk_size: int = 0):
+                    devices: int = None, chunk_size: int = 0,
+                    diagnostics: bool = False):
     """Run many (cfg, trace, algo, seed) scenarios in one vmapped scan
     dispatch per shape bucket, via the ``repro.scale`` grid executor.
 
@@ -519,5 +552,5 @@ def run_online_grid(jobs, ocfg, backend: str = "vmap",
 
     spec = GridSpec(kind="online", jobs=list(jobs), ocfg=ocfg,
                     backend=backend, devices=devices,
-                    chunk_size=chunk_size)
+                    chunk_size=chunk_size, diagnostics=diagnostics)
     return run_grid(spec).results

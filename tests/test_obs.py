@@ -1,0 +1,350 @@
+"""Observability subsystem (``repro.obs``) contract tests.
+
+Three layers, mirroring the subsystem:
+
+  * host-side tracing/manifests — pure-python span nesting, exports,
+    retrace accounting, and run provenance (no jax required);
+  * jit-safe diagnostics taps — the solver/engine curves must be
+    DECISION-INERT: bit-identical x/A/QoE with the tap on or off, on the
+    reference kernel, the fused kernel's scan engine, the offline and
+    policy device grids, the online scan, and the sharded executor;
+  * regression invariants — repeat sweeps retrace nothing
+    (compile-cache deltas stay zero), ``solve_lp_pdhg`` carries an
+    honest ``converged`` flag, and ``scripts/report.py`` renders the
+    artifacts and gates on convergence.
+"""
+import importlib.util
+import json
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+from harness import assert_same_offline, make_instance
+
+from repro.obs import (Tracer, config_hash, lp_diag_summary,
+                       register_jit, retrace_snapshot, run_manifest,
+                       total_retraces_since, write_manifest)
+
+ITERS = 150          # truncated solver budget: cheap, deterministic
+
+
+# ---------------------------------------------------------------------------
+# tracing (pure host)
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_and_summary():
+    tr = Tracer()
+    with tr.span("outer", kind="test"):
+        with tr.span("inner") as sp:
+            assert sp.depth == 1
+    spans = tr.spans
+    assert [s.name for s in spans] == ["outer", "inner"]
+    assert spans[0].depth == 0 and spans[0].parent == -1
+    assert spans[1].parent == 0
+    assert spans[0].seconds >= spans[1].seconds >= 0.0
+    assert spans[0].attrs == {"kind": "test"}
+    summ = tr.summary(top=1)
+    assert summ["by_name"]["outer"]["count"] == 1
+    assert len(summ["slowest"]) == 1
+
+
+def test_span_exports(tmp_path):
+    tr = Tracer()
+    with tr.span("a", n=1):
+        with tr.span("b"):
+            pass
+    jl = tr.export_jsonl(tmp_path / "t.trace.jsonl")
+    rows = [json.loads(line) for line in
+            pathlib.Path(jl).read_text().splitlines()]
+    assert [r["name"] for r in rows] == ["a", "b"]
+    assert rows[0]["attrs"] == {"n": 1}
+    ch = json.loads(pathlib.Path(
+        tr.export_chrome(tmp_path / "t.trace.chrome.json")).read_text())
+    ev = ch["traceEvents"]
+    assert len(ev) == 2 and all(e["ph"] == "X" for e in ev)
+    assert ev[0]["ts"] == 0.0 and ev[1]["ts"] >= 0.0
+    assert ev[1]["tid"] == 1                     # depth encodes nesting
+
+
+def test_retrace_accounting_via_registry():
+    class FakeJit:
+        def __init__(self):
+            self.n = 0
+
+        def _cache_size(self):
+            return self.n
+
+    fn = FakeJit()
+    register_jit("test:fake", fn)
+    tr = Tracer()
+    snap = retrace_snapshot()
+    with tr.span("warm") as sp:
+        fn.n += 2                                # "compiled twice"
+    assert sp.retraces == 2
+    assert total_retraces_since(snap) == 2
+    with tr.span("hot") as sp:
+        pass                                     # no new executables
+    assert sp.retraces == 0
+
+
+# ---------------------------------------------------------------------------
+# manifests
+# ---------------------------------------------------------------------------
+
+def test_run_manifest_fields():
+    m = run_manifest(config={"a": 1}, seeds={"seed": 0})
+    assert m["schema"] == "repro.obs.manifest/v1"
+    assert m["git"] is None or "sha" in m["git"]
+    assert m["python"].count(".") >= 1          # "3.10.x" version string
+    assert m["seeds"] == {"seed": 0}
+    assert m["config_hash"] == config_hash({"a": 1})
+    # jax block is honest about whether jax was imported
+    assert m["jax"]["imported"] in (True, False)
+
+
+def test_config_hash_stable_under_key_order():
+    assert config_hash({"a": 1, "b": 2}) == config_hash({"b": 2, "a": 1})
+    assert config_hash({"a": 1}) != config_hash({"a": 2})
+
+
+def test_write_manifest_sibling(tmp_path):
+    res = tmp_path / "grid.json"
+    res.write_text("[]")
+    p = write_manifest(res, config={"k": 1})
+    assert pathlib.Path(p).name == "grid.manifest.json"
+    m = json.loads(pathlib.Path(p).read_text())
+    assert m["config"] == {"k": 1}
+
+
+# ---------------------------------------------------------------------------
+# solver diagnostics: convergence flag + decision inertness
+# ---------------------------------------------------------------------------
+
+def test_solve_lp_pdhg_converged_flag():
+    from repro.core import lp as LP
+
+    inst = make_instance(n_users=24)
+    full = LP.solve_lp_pdhg(inst, iters=4000)
+    assert full.converged and full.tol == LP.PDHG_TOL
+    short = LP.solve_lp_pdhg(inst, iters=20, check_every=10)
+    assert not short.converged
+    assert short.primal_res > short.tol
+
+
+def test_reference_diag_inert_and_curves():
+    from repro.core import lp as LP
+
+    inst = make_instance(n_users=24)
+    off = LP.solve_lp_pdhg(inst, iters=ITERS, check_every=40)
+    on = LP.solve_lp_pdhg(inst, iters=ITERS, check_every=40,
+                          diagnostics=True)
+    np.testing.assert_array_equal(off.x, on.x)
+    np.testing.assert_array_equal(off.A, on.A)
+    d = on.diag
+    # ITERS=150, stride 40 -> samples at 40, 80, 120 and the final 150
+    assert list(d["iters"]) == [40, 80, 120, 150]
+    assert d["primal_res"].shape == d["dual_res"].shape == d["obj"].shape
+    summ = lp_diag_summary(d)
+    assert summ["final_residual"] == pytest.approx(float(
+        d["primal_res"][-1]))
+    assert summ["n_samples"] == 4
+
+
+def test_fused_scan_diag_inert():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import lp as LP
+    from repro.kernels.pdhg_fused import pdhg_fused
+
+    inst = make_instance(n_users=24)
+    data = jax.tree_util.tree_map(jnp.asarray, LP.pdhg_data(inst))
+    x0, A0 = pdhg_fused(data, ITERS, engine="scan")
+    out = pdhg_fused(data, ITERS, engine="scan", diagnostics=True,
+                     diag_stride=40)
+    np.testing.assert_array_equal(np.asarray(x0), np.asarray(out[0]))
+    np.testing.assert_array_equal(np.asarray(A0), np.asarray(out[1]))
+    d = out[2]
+    assert float(d["polish_delta"]) >= 0.0
+    assert d["primal_res"].shape == d["iters"].shape
+
+
+def test_offline_grid_diag_inert():
+    from repro.core.cocar import cocar_grid
+
+    insts = [make_instance(seed=s, n_users=20) for s in (0, 1)]
+    kw = dict(seed=0, pdhg_iters=ITERS, best_of=2, n_seeds=2)
+    off = cocar_grid(insts, backend="device", **kw)
+    on = cocar_grid(insts, backend="device", diagnostics=True, **kw)
+    assert_same_offline(off, on)
+    summ = on[0][0][2]["lp_diag"]["summary"]
+    assert {"final_residual", "converged", "iters_to_tol"} <= set(summ)
+
+
+def test_sharded_grid_diag_inert():
+    from repro.core.cocar import cocar_grid
+
+    insts = [make_instance(seed=s, n_users=20) for s in (0, 1, 2)]
+    kw = dict(seed=0, pdhg_iters=ITERS, best_of=2, n_seeds=1)
+    off = cocar_grid(insts, backend="device", **kw)
+    on = cocar_grid(insts, backend="sharded", diagnostics=True, **kw)
+    assert_same_offline(off, on)
+    assert "lp_diag" in on[0][0][2]
+
+
+def test_policy_grid_diag_inert():
+    from repro.scale import GridSpec, run_grid
+
+    insts = [make_instance(seed=s, n_users=20) for s in (0, 1)]
+    kw = dict(kind="policy", insts=insts, seed=0, n_seeds=1, best_of=2,
+              pdhg_iters=ITERS, episodes=4, backend="vmap")
+    off = run_grid(GridSpec(**kw))
+    on = run_grid(GridSpec(**kw, diagnostics=True))
+    for p in off.results:
+        assert_same_offline(off.results[p], on.results[p])
+    diags = on.stats["lp_diag"]
+    assert len(diags) == len(insts)
+    assert all("final_residual" in d for d in diags)
+    assert "lp_diag" not in off.stats
+
+
+def test_online_scan_diag_inert():
+    from repro.core.online import OnlineConfig
+    from repro.mec.scenario import MECConfig
+    from repro.traces.engine import run_online_scan
+
+    cfg = MECConfig(n_bs=3, n_users=30, n_models=4, seed=0)
+    ocfg = OnlineConfig(n_slots=12, rounds=2)
+    off = run_online_scan(cfg, ocfg, algo="cocar-ol")
+    on = run_online_scan(cfg, ocfg, algo="cocar-ol", diagnostics=True)
+    np.testing.assert_array_equal(off["slot_qoe"], on["slot_qoe"])
+    np.testing.assert_array_equal(off["final_state"].lvl,
+                                  on["final_state"].lvl)
+    d = on["diagnostics"]
+    assert set(d) == {"hit_rate", "dl_in_flight", "evictions", "cache_mb"}
+    assert all(v.shape == (12,) for v in d.values())
+    assert np.all((d["hit_rate"] >= 0.0) & (d["hit_rate"] <= 1.0))
+    assert "diagnostics" not in off
+
+
+def test_online_grid_sharded_diag_inert():
+    from repro.core.online import OnlineConfig
+    from repro.mec.scenario import MECConfig
+    from repro.traces.engine import run_online_grid
+    from repro.traces.registry import make_trace
+
+    cfg = MECConfig(n_bs=3, n_users=30, n_models=4, seed=0)
+    jobs = [dict(cfg=cfg, algo=a, trace=make_trace("stationary", cfg, 10,
+                                                   seed=0))
+            for a in ("cocar-ol", "lfu")]
+    ocfg = OnlineConfig(n_slots=10, rounds=2)
+    off = run_online_grid(jobs, ocfg, backend="vmap")
+    on = run_online_grid(jobs, ocfg, backend="sharded", diagnostics=True)
+    for a, b in zip(off, on):
+        np.testing.assert_array_equal(a["slot_qoe"], b["slot_qoe"])
+        assert b["diagnostics"]["hit_rate"].shape == (10,)
+
+
+# ---------------------------------------------------------------------------
+# retrace regression: repeat dispatches must not recompile
+# ---------------------------------------------------------------------------
+
+def test_repeat_sweep_zero_retraces():
+    from repro.core.cocar import cocar_grid
+
+    insts = [make_instance(seed=s, n_users=20) for s in (0, 1)]
+    kw = dict(seed=0, pdhg_iters=ITERS, best_of=2, n_seeds=1,
+              backend="device", diagnostics=True)
+    cocar_grid(insts, **kw)                      # warm every cache
+    snap = retrace_snapshot()
+    again = cocar_grid(insts, **kw)
+    assert total_retraces_since(snap) == 0, (
+        "repeat sweep recompiled a registered jit entry point")
+    assert len(again) == 2
+
+
+def test_executor_stats_spans():
+    from repro.scale import GridSpec, run_grid
+
+    insts = [make_instance(seed=s, n_users=20) for s in (0, 1)]
+    res = run_grid(GridSpec(kind="offline", insts=insts, seed=0,
+                            n_seeds=1, best_of=2, pdhg_iters=ITERS,
+                            backend="vmap"))
+    assert res.stats["seconds"] > 0.0
+    assert res.stats["retraces"] >= 0
+    assert res.stats["chunks"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# report.py rendering + convergence gate
+# ---------------------------------------------------------------------------
+
+def _report_mod():
+    path = (pathlib.Path(__file__).resolve().parent.parent
+            / "scripts" / "report.py")
+    spec = importlib.util.spec_from_file_location("obs_report", path)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules["obs_report"] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _fake_artifacts(root, converged=True):
+    rows = [{"zipf": 0.4, "lp_obj": 17.0, "pdhg_final_residual": 0.004,
+             "pdhg_converged": True},
+            {"zipf": 0.8, "lp_obj": 17.5,
+             "pdhg_final_residual": 0.004 if converged else 0.2,
+             "pdhg_converged": converged}]
+    (root / "grid.json").write_text(json.dumps(rows))
+    write_manifest(root / "grid.json", config={"smoke": True})
+    tr = Tracer()
+    with tr.span("sweep", kind="offline"):
+        with tr.span("chunk", kind="offline", bucket="(3, 20)", chunk=0,
+                     n_chunks=1, batch=2, pad_rows=0, in_bytes=1024):
+            pass
+    tr.export_jsonl(root / "grid.trace.jsonl")
+
+
+def test_report_renders_and_gates(tmp_path, capsys):
+    rep = _report_mod()
+    _fake_artifacts(tmp_path, converged=True)
+    assert rep.main([str(tmp_path), "--check-converged"]) == 0
+    out = capsys.readouterr().out
+    assert "== Manifests ==" in out
+    assert "== Spans ==" in out
+    assert "== Chunks ==" in out
+    assert "== Convergence (grid.json) ==" in out
+    assert "check-converged: OK" in out
+
+
+def test_report_gate_fails_on_nonconverged(tmp_path, capsys):
+    rep = _report_mod()
+    _fake_artifacts(tmp_path, converged=False)
+    assert rep.main([str(tmp_path), "--check-converged"]) == 1
+    assert "1 window(s) above tolerance" in capsys.readouterr().out
+
+
+def test_report_gate_fails_without_data(tmp_path):
+    rep = _report_mod()
+    assert rep.main([str(tmp_path), "--check-converged"]) == 1
+
+
+@pytest.mark.slow_compile
+def test_sweep_smoke_end_to_end(tmp_path, monkeypatch, capsys):
+    """``sweep --smoke`` in-process: rows converge, artifacts land, and
+    report.py renders them with the gate green."""
+    from repro.experiments import sweep as SW
+
+    monkeypatch.chdir(tmp_path)
+    rows = SW.main(smoke=True)
+    assert len(rows) == 2
+    assert all(r["pdhg_converged"] for r in rows)
+    ci = tmp_path / "results" / "sweep" / "ci"
+    for name in ("grid.json", "grid.manifest.json", "grid.trace.jsonl",
+                 "grid.trace.chrome.json"):
+        assert (ci / name).exists(), name
+    capsys.readouterr()
+    rep = _report_mod()
+    assert rep.main([str(ci), "--check-converged"]) == 0
+    assert "check-converged: OK" in capsys.readouterr().out
