@@ -1,14 +1,19 @@
 """Online engine benchmark: NumPy ``OnlineSim`` vs the ``lax.scan`` engine.
 
-Two measurements, persisted as ``results/bench/BENCH_online.json``:
+Both sides route through the unified ``run_online(workload, policy,
+cfg=..., ocfg=..., engine=...)`` API (demand is aggregated per-(BS,
+model) counts; only the per-user reference replay touches dense
+tensors).  Two measurements, persisted as
+``results/bench/BENCH_online.json``:
 
-  * **equivalence** — on a fixed stationary-Zipf trace, every policy's
-    per-slot QoE and final cache state must match between the two engines
-    (the scan engine mirrors the NumPy state machine op-for-op, f64);
-  * **throughput** — a >=16-scenario online grid (config variants x trace
-    families, all cocar-ol) through (a) the per-scenario NumPy slot loop
-    and (b) ONE vmapped scan dispatch.  Compile time is reported
-    separately: the steady-state number is what a sweep pays per
+  * **equivalence** — on a fixed stationary-Zipf workload, every policy's
+    per-slot QoE and final cache state must match between the per-user
+    reference replay and the scan engine (the scan engine mirrors the
+    NumPy state machine op-for-op, f64);
+  * **throughput** — a >=16-scenario online grid (config variants x
+    workload families, all cocar-ol) through (a) the per-scenario NumPy
+    slot loop and (b) ONE vmapped scan dispatch.  Compile time is
+    reported separately: the steady-state number is what a sweep pays per
     additional grid, the compile is paid once per process/shape.
 
 Run standalone:  PYTHONPATH=src python -m benchmarks.bench_online
@@ -23,26 +28,29 @@ import numpy as np
 from benchmarks import common
 from repro.core.online import OnlineConfig, run_online
 from repro.mec.scenario import MECConfig, config_grid
-from repro.traces import draw_decision_stream, make_trace
+from repro.traces import as_workload, draw_decision_stream, make_trace, make_workload
 from repro.traces import engine as E
 
 ALGOS = ("cocar-ol", "lfu", "lfu-mad", "random")
 
 
 def bench_equivalence(n_users=100, n_slots=30):
-    """Per-policy NumPy-vs-scan parity on one stationary trace."""
+    """Per-policy parity on one stationary workload: per-user reference
+    replay vs the aggregated scan engine."""
     from repro.core.online import run_online_trace
 
     cfg = MECConfig(n_users=n_users)
     ocfg = OnlineConfig(n_slots=n_slots)
     trace = make_trace("stationary", cfg, n_slots, seed=cfg.seed)
+    wl = as_workload(trace, cfg=cfg)
     stream = draw_decision_stream(n_slots, ocfg.rounds, cfg.n_bs,
                                   cfg.n_models, cfg.seed + 99)
     rows = {}
     for algo in ALGOS:
         qs, _, sim = run_online_trace(cfg, ocfg, algo, trace, stream)
         lvl = np.argmax(sim.X, -1)
-        res = E.run_online_scan(cfg, ocfg, algo, trace=trace, stream=stream)
+        res = run_online(wl, algo, cfg=cfg, ocfg=ocfg, engine="scan",
+                         stream=stream)
         gap = float(np.abs(qs - res["slot_qoe"]).max() / max(qs.max(), 1e-9))
         state_eq = bool((res["final_state"].lvl == lvl).all())
         rows[algo] = {"max_slot_qoe_relgap": gap, "final_state_equal": state_eq}
@@ -55,10 +63,10 @@ def _grid_jobs(ocfg, n_users):
     cfgs = config_grid(MECConfig(n_users=n_users),
                        {"zipf": (0.4, 0.8),
                         "mem_capacity_mb": (300.0, 500.0)})
-    traces = ("stationary", "drift", "flash_crowd", "mobility")
+    families = ("stationary", "drift", "flash_crowd", "mobility")
     return [dict(cfg=c, algo="cocar-ol",
-                 trace=make_trace(t, c, ocfg.n_slots, seed=c.seed))
-            for c in cfgs for t in traces]
+                 workload=make_workload(t, c, ocfg.n_slots, seed=c.seed))
+            for c in cfgs for t in families]
 
 
 def bench_throughput(n_users=None, n_slots=None):
@@ -78,7 +86,8 @@ def bench_throughput(n_users=None, n_slots=None):
     t_scan = time.time() - t0
 
     t0 = time.time()
-    np_res = [run_online(j["cfg"], ocfg, j["algo"], trace=j["trace"])
+    np_res = [run_online(j["workload"], j["algo"], cfg=j["cfg"],
+                         ocfg=ocfg, engine="numpy")
               for j in jobs]
     t_np = time.time() - t0
 

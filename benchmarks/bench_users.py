@@ -1,0 +1,170 @@
+"""Million-user workload benchmark for the aggregated online engine.
+
+The point of the Workload API: online demand enters the engines as
+per-slot ``(n_bs, n_models)`` request-count tensors, so cost and memory
+are independent of the user population U.  Two blocks, persisted as
+``results/bench/BENCH_users.json``:
+
+  * **identity** — at small U, where the dense per-user replay is still
+    affordable, the aggregated scan engine must make bit-identical cache
+    decisions and per-slot QoE within 1e-9 of the per-user reference
+    (``run_online_trace``), and chunk-streamed execution must be
+    bit-identical to the one-shot scan (a scan is a strict fold — the
+    chunk layout cannot change anything);
+  * **scale** — a ``poisson_zipf`` streaming workload with one MILLION
+    users per slot runs through the chunked scan engine while
+    ``tracemalloc`` watches host allocations: peak traced memory must
+    stay bounded (``memory_bounded``) and far below what a dense (T, U)
+    per-user tensor would cost (``no_dense_tensor``).
+
+``scripts/check_bench.py`` gates the flags and gaps against the
+committed baseline.  The smoke run keeps U at 1e6 — per-slot cost does
+not depend on U, that is the point — and only shrinks the horizon.
+
+Run standalone:  PYTHONPATH=src python -m benchmarks.bench_users
+Quick CI smoke:  PYTHONPATH=src python -m benchmarks.bench_users --smoke
+"""
+from __future__ import annotations
+
+import time
+import tracemalloc
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.online import OnlineConfig, run_online, run_online_trace
+from repro.mec.scenario import MECConfig
+from repro.traces import as_workload, draw_decision_stream, make_trace, make_workload
+
+MEM_CAP_MB = 256.0         # absolute host-allocation ceiling for the scale run
+DENSE_BYTES_PER_REQ = 16   # what a (T, U) per-user trace costs per user-slot
+
+
+def _state_equal(a, b):
+    return bool(np.array_equal(np.asarray(a.lvl), np.asarray(b.lvl))
+                and np.array_equal(np.asarray(a.target), np.asarray(b.target)))
+
+
+def bench_identity(n_users=120, n_slots=40, chunk_slots=7):
+    """Small-U certificate: per-user replay vs aggregated engines."""
+    cfg = MECConfig(n_users=n_users)
+    ocfg = OnlineConfig(n_slots=n_slots)
+    trace = make_trace("stationary", cfg, n_slots, seed=cfg.seed)
+    wl = as_workload(trace, cfg=cfg)
+    stream = draw_decision_stream(n_slots, ocfg.rounds, cfg.n_bs,
+                                  cfg.n_models, cfg.seed + 99)
+
+    # per-user reference: routes every user individually (Eq. 41)
+    qs, _, sim = run_online_trace(cfg, ocfg, "cocar-ol", trace, stream)
+    ref = sim.state()
+
+    scan = run_online(wl, "cocar-ol", cfg=cfg, ocfg=ocfg, engine="scan",
+                      stream=stream)
+    chunked = run_online(wl, "cocar-ol", cfg=cfg, ocfg=ocfg, engine="scan",
+                         stream=stream, chunk_slots=chunk_slots)
+    agg_np = run_online(wl, "cocar-ol", cfg=cfg, ocfg=ocfg, engine="numpy",
+                        stream=stream)
+
+    scale = max(float(qs.max()), 1e-9)
+    out = {
+        "n_users": n_users,
+        "n_slots": n_slots,
+        "chunk_slots": chunk_slots,
+        "decisions_identical": _state_equal(ref, scan["final_state"]),
+        "numpy_state_equal": _state_equal(ref, agg_np["final_state"]),
+        "chunked_identical": bool(
+            np.array_equal(scan["slot_qoe"], chunked["slot_qoe"])
+            and _state_equal(scan["final_state"], chunked["final_state"])),
+        "max_slot_qoe_relgap": float(
+            np.abs(qs - scan["slot_qoe"]).max() / scale),
+        "numpy_max_slot_qoe_relgap": float(
+            np.abs(qs - agg_np["slot_qoe"]).max() / scale),
+    }
+    common.csv_row(
+        "users_identity", 0,
+        f"decisions={out['decisions_identical']};"
+        f"chunked={out['chunked_identical']};"
+        f"relgap={out['max_slot_qoe_relgap']:.2e}")
+    return out
+
+
+def bench_scale(users_per_slot=1_000_000, n_slots=None, chunk_slots=25):
+    """Stream U=1e6 per slot through the chunked scan engine, watching
+    host allocations.  The first (untimed) pass pays the chunk-shape
+    compile; the measured pass is the steady-state streaming cost."""
+    n_slots = n_slots or (200 if common.FULL else 25)
+    cfg = MECConfig()      # engine params only; demand comes from the workload
+    ocfg = OnlineConfig(n_slots=n_slots)
+    wl = make_workload("poisson_zipf", cfg, n_slots, seed=1,
+                       users_per_slot=users_per_slot,
+                       chunk_slots=chunk_slots)
+    run = lambda: run_online(wl, "cocar-ol", cfg=cfg, ocfg=ocfg,  # noqa: E731
+                             engine="scan", chunk_slots=chunk_slots)
+    run()                                   # warm the chunk-shape compile
+    tracemalloc.start()
+    t0 = time.perf_counter()
+    res = run()
+    wall = time.perf_counter() - t0
+    peak_mb = tracemalloc.get_traced_memory()[1] / 1e6
+    tracemalloc.stop()
+
+    total = wl.total()
+    dense_mb = n_slots * users_per_slot * DENSE_BYTES_PER_REQ / 1e6
+    out = {
+        "users_per_slot": users_per_slot,
+        "n_slots": n_slots,
+        "chunk_slots": chunk_slots,
+        "total_requests": total,
+        "avg_qoe": res["avg_qoe"],
+        "hit_rate": res["hit_rate"],
+        "wall_s": wall,
+        "slots_per_s": n_slots / wall,
+        "requests_per_s": total / wall,
+        "peak_host_mb": peak_mb,
+        "dense_equivalent_mb": dense_mb,
+        "memory_bounded": bool(peak_mb < MEM_CAP_MB),
+        "no_dense_tensor": bool(peak_mb < dense_mb / 10),
+    }
+    common.csv_row(
+        f"users_scale_U{users_per_slot:.0e}", wall / n_slots * 1e6,
+        f"reqs_s={out['requests_per_s']:.2e};peak_mb={peak_mb:.1f};"
+        f"dense_mb={dense_mb:.0f};qoe={res['avg_qoe']:.3f}")
+    return out
+
+
+def main():
+    out = {"identity": bench_identity(), "scale": bench_scale()}
+    common.save("BENCH_users", out)
+    sc = out["scale"]
+    print(f"users bench: U={sc['users_per_slot']:.0e}/slot x "
+          f"{sc['n_slots']} slots ({sc['total_requests']:.2e} requests) "
+          f"in {sc['wall_s']:.2f}s, peak host {sc['peak_host_mb']:.1f} MB "
+          f"(dense per-user would be {sc['dense_equivalent_mb']:.0f} MB); "
+          f"small-U decisions identical: "
+          f"{out['identity']['decisions_identical']}")
+    return out
+
+
+def smoke():
+    """CI smoke: same U=1e6 (cost is U-independent), shorter horizon.
+
+    Saved to the ``ci/`` scratch subdir so ``check_bench.py`` gates the
+    identity flags + gaps without touching the committed baseline."""
+    out = {"identity": bench_identity(n_users=60, n_slots=16, chunk_slots=5),
+           "scale": bench_scale(n_slots=15, chunk_slots=5)}
+    common.save("BENCH_users", out, subdir="ci")
+    ident = out["identity"]
+    assert ident["decisions_identical"] and ident["chunked_identical"], ident
+    assert ident["max_slot_qoe_relgap"] < 1e-9, ident
+    assert out["scale"]["memory_bounded"], out["scale"]
+    print(f"users smoke OK: decisions identical at U={ident['n_users']}, "
+          f"U=1e6 stream peaked at {out['scale']['peak_host_mb']:.1f} MB")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+    else:
+        main()

@@ -1,21 +1,29 @@
-"""CoCaR-OL vs the online baselines across trace workloads (paper Sec. VI).
+"""CoCaR-OL vs the online baselines across workloads (paper Sec. VI).
 
-Part 1 replays the paper's popularity-shift regime (Fig. 13) through the
-trace API: the whole request stream is pre-drawn (``repro.traces``), so
+Everything routes through the unified API introduced with the Workload
+protocol: ``run_online(workload, policy, cfg=..., ocfg=..., engine=...)``.
+Demand is aggregated per-(BS, model) request counts — the engines never
+see a per-user tensor.
+
+Part 1 replays the paper's popularity-shift regime (Fig. 13) on the NumPy
+engine: the whole request stream is pre-drawn (``repro.traces``), so
 every policy replays the identical workload.
 
 Part 2 hits the policies with a *flash crowd* — a model nobody cached
 suddenly absorbs 90% of the traffic — and shows the expected-future-gain
 policy pre-positioning submodel upgrades while LFU chases stale counts.
-All (trace x policy) runs go through the vectorized scan engine in ONE
-vmapped dispatch (``backend``/grid switch introduced with the trace
-subsystem).
+All (workload x policy) runs go through the vectorized scan engine in ONE
+vmapped dispatch.
+
+Part 3 streams a *million users per slot* through the scan engine: the
+``poisson_zipf`` family samples per-slot (BS, model) counts chunk-by-
+chunk, so memory stays O(chunk) no matter how large U grows.
 
 Run:  PYTHONPATH=src python examples/online_adaptation.py
 """
 from repro.core.online import OnlineConfig, run_online
 from repro.mec.scenario import MECConfig
-from repro.traces import make_trace
+from repro.traces import default_workload, make_workload
 from repro.traces.engine import run_online_grid
 
 ALGOS = ("cocar-ol", "lfu", "lfu-mad", "random")
@@ -25,29 +33,41 @@ ocfg = OnlineConfig(n_slots=80, pop_change_every=20)
 
 print("part 1 — popularity drift (5 BSs, 300 users/slot, shift every "
       "20 slots), NumPy engine:\n")
+wl = default_workload(cfg, ocfg)
 for algo in ALGOS:
-    r = run_online(cfg, ocfg, algo)
+    r = run_online(wl, algo, cfg=cfg, ocfg=ocfg, engine="numpy")
     print(f"  {algo:10s}  avg QoE {r['avg_qoe']:.3f}   "
           f"hit rate {r['hit_rate']:.3f}")
 
 print("\nwithout dynamic-DNN partitioning (complete models only):")
 ocfg_np = OnlineConfig(n_slots=80, pop_change_every=20, partition=False)
+wl_np = default_workload(cfg, ocfg_np)
 for algo in ("cocar-ol", "lfu"):
-    r = run_online(cfg, ocfg_np, algo)
+    r = run_online(wl_np, algo, cfg=cfg, ocfg=ocfg_np, engine="numpy")
     print(f"  {algo:10s}  avg QoE {r['avg_qoe']:.3f}   "
           f"hit rate {r['hit_rate']:.3f}")
 
 print("\npart 2 — flash crowd (two 12-slot spikes, hot model takes 90% "
       "of traffic),\nall runs in one vmapped scan dispatch:\n")
-flash = make_trace("flash_crowd", cfg, ocfg.n_slots, seed=cfg.seed,
-                   n_events=2, duration=12, intensity=0.9)
-calm = make_trace("stationary", cfg, ocfg.n_slots, seed=cfg.seed)
-jobs = [dict(cfg=cfg, algo=a, trace=t)
-        for t in (calm, flash) for a in ALGOS]
+flash = make_workload("flash_crowd", cfg, ocfg.n_slots, seed=cfg.seed,
+                      n_events=2, duration=12, intensity=0.9)
+calm = make_workload("stationary", cfg, ocfg.n_slots, seed=cfg.seed)
+jobs = [dict(cfg=cfg, algo=a, workload=w)
+        for w in (calm, flash) for a in ALGOS]
 res = run_online_grid(jobs, ocfg)
 for (job, r) in zip(jobs, res):
-    print(f"  {job['trace'].name:12s} {job['algo']:10s}  "
+    print(f"  {job['workload'].name:12s} {job['algo']:10s}  "
           f"avg QoE {r['avg_qoe']:.3f}   hit rate {r['hit_rate']:.3f}")
 spikes = ", ".join(f"t={e['start']}..{e['end']} model {e['model']}"
                    for e in flash.meta["events"])
 print(f"\n  (spikes: {spikes})")
+
+print("\npart 3 — one million users per slot, streamed through the scan "
+      "engine\nin 20-slot chunks (no per-user tensor ever exists):\n")
+mega = make_workload("poisson_zipf", cfg, ocfg.n_slots, seed=1,
+                     users_per_slot=1_000_000, chunk_slots=20)
+r = run_online(mega, "cocar-ol", cfg=cfg, ocfg=ocfg, engine="scan",
+               chunk_slots=20)
+print(f"  cocar-ol    avg QoE {r['avg_qoe']:.3f}   "
+      f"hit rate {r['hit_rate']:.3f}   "
+      f"({mega.total():.2e} requests over {ocfg.n_slots} slots)")

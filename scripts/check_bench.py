@@ -54,6 +54,22 @@ MANIFEST = {
                   "equivalence.lfu-mad.final_state_equal",
                   "equivalence.random.final_state_equal"],
     },
+    "BENCH_users.json": {
+        "scale": ["scale.users_per_slot", "scale.n_slots",
+                  "scale.chunk_slots"],
+        "ratios": [],
+        "gaps": ["identity.max_slot_qoe_relgap",
+                 "identity.numpy_max_slot_qoe_relgap"],
+        # the Workload API's contract: the aggregated count-tensor engine
+        # makes the SAME cache decisions as the per-user replay at small
+        # U, chunk streaming changes nothing (a scan is a strict fold),
+        # and the U=1e6 stream never materializes a dense (T, U) tensor
+        # (peak host memory bounded and << the dense-equivalent bytes)
+        "flags": ["identity.decisions_identical",
+                  "identity.numpy_state_equal",
+                  "identity.chunked_identical",
+                  "scale.memory_bounded", "scale.no_dense_tensor"],
+    },
     "BENCH_offline.json": {
         "scale": ["throughput.variants", "throughput.n_seeds",
                   "throughput.n_users", "throughput.pdhg_iters"],

@@ -34,6 +34,13 @@ JAX_ENABLE_X64=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.bench_online --smoke
 JAX_ENABLE_X64=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.bench_offline --smoke
+# the Workload API's aggregation certificate: count-tensor engines make
+# the per-user replay's decisions bit-exactly at small U, and a U=1e6/slot
+# poisson_zipf stream runs chunk-by-chunk at bounded host memory (the
+# smoke keeps U at 1e6 — per-slot cost is U-independent, that is the
+# point — and only shortens the horizon)
+JAX_ENABLE_X64=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.bench_users --smoke
 JAX_ENABLE_X64=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.bench_baselines --smoke
 # the fused LP backend's conformance smoke: lp_backend="pallas" must

@@ -180,7 +180,14 @@ def report_online(root):
             extra = (f"  dl_in_flight={r['mean_dl_in_flight']:.2f}  "
                      f"evictions={r['evictions']:.0f}  "
                      f"cache={r['final_cache_mb']:.0f}MB")
-        print(f"  {r.get('trace', '?'):12s} {r.get('algo', '?'):10s} "
+        # rows carry "workload" (+ optional "family") since the Workload
+        # API; older artifacts carry "trace" — render both identically,
+        # aggregated or per-user
+        wl = r.get("workload", r.get("trace", "?"))
+        fam = r.get("family")
+        if fam and fam != wl:
+            wl = f"{wl}[{fam}]"
+        print(f"  {wl:12s} {r.get('algo', '?'):10s} "
               f"qoe={r.get('avg_qoe', float('nan')):.3f} "
               f"hit={r.get('hit_rate', float('nan')):.3f}{extra}")
 
@@ -189,7 +196,9 @@ def report_bench(root):
     keys = (("grid.pdhg_final_residual", "grid residual"),
             ("grid.n_windows_not_converged", "grid not conv"),
             ("solve.pdhg_final_residual", "solve residual"),
-            ("solve.pdhg_converged", "solve converged"))
+            ("solve.pdhg_converged", "solve converged"),
+            ("identity.decisions_identical", "aggregated==per-user"),
+            ("scale.peak_host_mb", "U=1e6 peak host MB"))
     lines = []
     for p in sorted(root.glob("BENCH_*.json")):
         payload = _load_json(p)

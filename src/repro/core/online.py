@@ -10,17 +10,28 @@ Implements faithfully:
     multi-choice knapsack per adjusted BS (Alg. 2 lines 15–21);
   * eviction/shrink is immediate (Eq. 49).
 
-Workloads come from ``repro.traces``: the whole request stream AND every
-random number the policies consume (``DecisionStream``) are pre-drawn, so
-all four policies replay byte-identical inputs — no policy's RNG
-consumption can perturb another's stream.  ``run_online(..., trace=...)``
-accepts any registered trace family (flash crowds, diurnal load, MMPP
-bursts, mobility, …), and ``backend="scan"`` dispatches the same run to
-the vectorized ``jax.lax.scan`` engine (``repro.traces.engine``), which
-matches this NumPy state machine slot-for-slot.
+Workloads come from ``repro.traces``: demand is a
+:class:`~repro.traces.workloads.Workload` — per-slot ``(n_bs, n_models)``
+request-count tensors (exact for dense/log families, sampled for the
+streaming Poisson family) — and every random number the policies consume
+(``DecisionStream``) is pre-drawn, so all four policies replay
+byte-identical inputs — no policy's RNG consumption can perturb
+another's stream.  The QoE sum (Eq. 40) and the caching updates
+(Eqs. 45-49) only ever see users through their (home BS, model) pair, so
+the aggregation is exact; only the optional per-user reference replay
+(``run_online_trace``) touches dense tensors.
+
+``run_online(workload, policy, *, cfg=..., ocfg=..., engine=...)`` is the
+single entry point every caller (sweep, grid executor, examples, benches)
+routes through; ``engine="scan"`` dispatches to the vectorized
+``jax.lax.scan`` engine (``repro.traces.engine``), which matches this
+NumPy state machine slot-for-slot.  The legacy signature
+``run_online(cfg, ocfg, algo, trace=..., backend=...)`` remains as a
+deprecated shim for one release.
 """
 from __future__ import annotations
 
+import warnings
 from collections import deque
 from dataclasses import dataclass
 
@@ -29,6 +40,7 @@ import numpy as np
 from repro.mec.scenario import MECConfig, Scenario
 from repro.traces.generators import DecisionStream, Trace, check_trace, default_stream
 from repro.traces.registry import default_trace
+from repro.traces.workloads import DenseWorkload, Workload, as_workload, check_workload
 
 
 @dataclass
@@ -47,21 +59,28 @@ class OnlineConfig:
 
 
 class OnlineSim:
-    """Download/cache state machine replaying a precomputed request trace.
+    """Download/cache state machine replaying a precomputed workload.
 
-    The trace (``repro.traces.Trace``) is drawn up front from its own PRNG
-    key; ``draw_slot_requests`` only slices it, so the stream is identical
-    for every policy run against the same (cfg, trace).
+    Demand arrives as a :class:`~repro.traces.workloads.Workload` (or a
+    per-user ``Trace``, wrapped on the way in); the stream is drawn up
+    front from its own PRNG key, so it is identical for every policy run
+    against the same (cfg, workload).  ``self.trace`` is the dense
+    per-user view when the workload has one (the reference replay needs
+    it) and ``None`` for aggregated-only families.
     """
 
     def __init__(self, cfg: MECConfig, ocfg: OnlineConfig,
-                 trace: Trace = None):
+                 trace: Trace = None, workload: Workload = None):
         self.cfg, self.ocfg = cfg, ocfg
         self.sc = Scenario(cfg)
         N, M, H = cfg.n_bs, cfg.n_models, self.sc.sizes.shape[1] - 1
         self.N, self.M, self.H = N, M, H
-        self.trace = check_trace(trace or default_trace(cfg, ocfg),
-                                 cfg, ocfg)
+        if workload is not None:
+            wl = as_workload(workload, cfg=cfg)
+        else:
+            wl = DenseWorkload(trace or default_trace(cfg, ocfg), N, M)
+        self.workload = check_workload(wl, cfg, ocfg)
+        self.trace = wl.trace if isinstance(wl, DenseWorkload) else None
         # state
         self.X = np.zeros((N, M, H + 1))
         self.X[:, :, 0] = 1
@@ -81,6 +100,12 @@ class OnlineSim:
     # ---------------- request stream ----------------
     def draw_slot_requests(self, t):
         """Slot t's (m_u, home) from the precomputed trace."""
+        if self.trace is None:
+            raise ValueError(
+                f"workload {self.workload.name!r} (family "
+                f"{self.workload.family!r}) is aggregated-only — no "
+                f"per-user tensors exist; use route_counts / the "
+                f"counts-driven replay instead")
         return self.trace.requests(t)
 
     # ---------------- Eqs. 35–37: routine update ----------------
@@ -135,6 +160,34 @@ class OnlineSim:
         best = q.max(axis=1)                              # (N_home, M)
         vals = best[home, m_u]
         return float(vals.sum()), int((vals > 0).sum())
+
+    def route_counts(self, counts):
+        """Eq. 41 over aggregated demand: ``counts`` is the slot's (N, M)
+        request-count tensor.  Exact — every user at (home n, model m)
+        receives the same argmax-QoE value, so the per-user sum IS the
+        count-weighted sum (summation order differs, hence ~1e-16
+        relative float drift vs. :meth:`route`; hits are integers and
+        match exactly)."""
+        q, _ = self.qoe_matrix()
+        best = q.max(axis=1)                              # (N_home, M)
+        return (float((counts * best).sum()),
+                float((counts * (best > 0)).sum()))
+
+    def state(self):
+        """Export the cache/download state in the scan engine's
+        ``OnlineState`` layout (lvl/O/target/hist, history zero-padded at
+        the front) — the currency of the decision-identity certificates."""
+        from repro.traces.engine import OnlineState
+
+        P = self.ocfg.dT_past
+        hist = [np.asarray(h, np.float64) for h in self.hist]
+        pad = [np.zeros((self.N, self.M))] * (P - len(hist))
+        return OnlineState(
+            lvl=np.argmax(self.X, axis=-1).astype(np.int32),
+            O=self.O.copy(),
+            target=self.target.astype(np.int32),
+            hist=(np.stack(pad + hist) if (pad or hist)
+                  else np.zeros((0, self.N, self.M))))
 
     # ---------------- Eqs. 45–47: expected future gain ----------------
     def freq(self):
@@ -284,70 +337,158 @@ class OnlineSim:
 # drivers
 # ---------------------------------------------------------------------------
 
-def run_online(cfg: MECConfig, ocfg: OnlineConfig, algo: str = "cocar-ol",
-               seed: int = 0, trace: Trace = None,
-               stream: DecisionStream = None, backend: str = "numpy"):
-    """Run one (scenario, workload, policy) online trace.
+def run_online(workload=None, policy: str = "cocar-ol", *args, **kw):
+    """Run one (scenario, workload, policy) online episode — the unified
+    entry point every online caller routes through.
 
-    ``trace`` selects the workload (any ``repro.traces`` family; default is
-    the legacy Zipf/drift stream), ``stream`` the policies' pre-drawn
-    randomness, ``backend`` the engine: ``"numpy"`` is this module's
-    per-slot state machine, ``"scan"`` the jit-compiled ``lax.scan`` engine
-    (identical results, one XLA dispatch for the whole run).
+    New API::
+
+        run_online(workload, policy, *, cfg=..., ocfg=..., engine="scan",
+                   seed=0, stream=None, chunk_slots=0, diagnostics=False)
+
+    ``workload`` is anything ``repro.traces.as_workload`` accepts (a
+    ``Workload``, a per-user ``Trace``, or a ``(T, N, M)`` count tensor);
+    ``engine="scan"`` is the jit-compiled ``lax.scan`` engine (one XLA
+    dispatch per chunk, O(chunk) memory for streaming workloads),
+    ``engine="numpy"`` this module's per-slot state machine — identical
+    decisions either way.  Returns a summary dict with ``avg_qoe``/
+    ``hit_rate``, per-slot arrays, and the final cache state.
+
+    The legacy signature ``run_online(cfg, ocfg, algo, seed, trace,
+    stream, backend)`` is kept as a deprecated shim (one release): it
+    derives the same defaults it always did, wraps the trace as a
+    ``DenseWorkload``, and returns only ``{avg_qoe, hit_rate}``.
     """
+    if isinstance(workload, MECConfig):
+        warnings.warn(
+            "run_online(cfg, ocfg, algo, trace=..., backend=...) is "
+            "deprecated; build a Workload (repro.traces.make_workload / "
+            "as_workload) and call run_online(workload, policy, cfg=cfg, "
+            "ocfg=ocfg, engine=...)", DeprecationWarning, stacklevel=2)
+        return _run_online_legacy(workload, policy, *args, **kw)
+    return _run_online_workload(workload, policy, *args, **kw)
+
+
+def _run_online_workload(workload, policy: str = "cocar-ol", *,
+                         cfg: MECConfig = None, ocfg: OnlineConfig = None,
+                         engine: str = "scan", seed: int = 0,
+                         stream: DecisionStream = None,
+                         chunk_slots: int = 0, diagnostics: bool = False):
+    """The unified path behind ``run_online(workload, policy, ...)``."""
+    if cfg is None or ocfg is None:
+        raise TypeError(
+            "run_online(workload, policy, ...) needs cfg= and ocfg=")
+    workload = check_workload(as_workload(workload, cfg=cfg), cfg, ocfg)
+    if stream is None:
+        stream = default_stream(cfg, ocfg, seed)
+    if engine == "scan":
+        from repro.traces.engine import make_params, run_workload
+        out = run_workload(make_params(cfg, ocfg), workload, stream,
+                           policy, dT_past=ocfg.dT_past,
+                           diagnostics=diagnostics,
+                           chunk_slots=chunk_slots)
+    elif engine == "numpy":
+        slot_qoe, slot_hits, sim = replay_workload(
+            cfg, ocfg, policy, workload, stream, chunk_slots=chunk_slots)
+        total = workload.total()
+        out = {"avg_qoe": float(slot_qoe.sum()) / max(total, 1.0),
+               "hit_rate": float(slot_hits.sum()) / max(total, 1.0),
+               "slot_qoe": slot_qoe, "slot_hits": slot_hits,
+               "final_state": sim.state()}
+    else:
+        raise ValueError(
+            f"unknown engine {engine!r}; one of ('scan', 'numpy')")
+    out["workload"] = workload.name
+    return out
+
+
+def _run_online_legacy(cfg: MECConfig, ocfg: OnlineConfig,
+                       algo: str = "cocar-ol", seed: int = 0,
+                       trace: Trace = None, stream: DecisionStream = None,
+                       backend: str = "numpy"):
+    """The pre-Workload signature, as a thin layer over the unified path
+    (same default trace/stream derivations, same return contract)."""
     cfg = MECConfig(**{**cfg.__dict__, "seed": seed})
     if trace is None:
         trace = default_trace(cfg, ocfg)
     check_trace(trace, cfg, ocfg)
     if stream is None:
         stream = default_stream(cfg, ocfg, seed)
-    if backend == "scan":
-        from repro.traces.engine import run_online_scan
-        res = run_online_scan(cfg, ocfg, algo, seed=seed, trace=trace,
-                              stream=stream)
-        return {"avg_qoe": res["avg_qoe"], "hit_rate": res["hit_rate"]}
-    if backend != "numpy":
+    engine = {"numpy": "numpy", "scan": "scan"}.get(backend)
+    if engine is None:
         raise ValueError(f"unknown backend {backend!r}")
-    slot_qoe, slot_hits, _ = run_online_trace(cfg, ocfg, algo, trace, stream)
-    total_users = int(trace.mask.sum())
-    return {"avg_qoe": float(slot_qoe.sum()) / max(total_users, 1),
-            "hit_rate": float(slot_hits.sum()) / max(total_users, 1)}
+    res = _run_online_workload(
+        DenseWorkload(trace, cfg.n_bs, cfg.n_models), algo,
+        cfg=cfg, ocfg=ocfg, engine=engine, stream=stream)
+    return {"avg_qoe": res["avg_qoe"], "hit_rate": res["hit_rate"]}
+
+
+def _policy_step(sim: OnlineSim, algo: str, t: int,
+                 stream: DecisionStream, ocfg: OnlineConfig):
+    """One slot's caching decision — shared by every NumPy replay."""
+    if algo == "cocar-ol":
+        for n in stream.adjust_ns[t]:
+            sim.adjust_bs(n)
+    elif algo in ("lfu", "lfu-mad"):
+        _lfu_step(sim, stream.adjust_ns[t], ocfg, mad=(algo == "lfu-mad"))
+    elif algo == "random":
+        _random_step(sim, stream.adjust_ns[t], stream.u_model[t],
+                     stream.perms[t], stream.u_shrink[t], ocfg)
+    else:
+        raise ValueError(algo)
+
+
+def replay_workload(cfg: MECConfig, ocfg: OnlineConfig, algo: str,
+                    workload, stream: DecisionStream,
+                    per_user: bool = False, chunk_slots: int = 0):
+    """The NumPy per-slot loop over aggregated demand, with per-slot
+    recording.
+
+    This is THE reference slot ordering (downloads -> routing -> history
+    push -> policy).  The policies consume only the count history, so
+    decisions are bit-identical for any workload representation; routing
+    QoE is count-weighted (:meth:`OnlineSim.route_counts`).  With
+    ``per_user`` (dense workloads only) the slot QoE/hits are instead
+    re-derived from the per-user tensors in the original per-user
+    summation order — the bit-reference the equivalence certificates
+    compare against.  Streams the workload chunk-by-chunk (O(chunk)
+    memory).  Returns ``(slot_qoe (T,), slot_hits (T,), sim)``.
+    """
+    workload = as_workload(workload, cfg=cfg)
+    if per_user and not isinstance(workload, DenseWorkload):
+        raise ValueError(
+            f"per-user replay needs a dense workload, got "
+            f"{workload.name!r} (family {workload.family!r})")
+    sim = OnlineSim(cfg, ocfg, workload=workload)
+    slot_qoe, slot_hits = [], []
+    for t0, t1, chunk in workload.iter_chunks(chunk_slots):
+        for k in range(t1 - t0):
+            t = t0 + k
+            sim.routine_update()
+            if per_user:
+                m_u, home = sim.draw_slot_requests(t)
+                q, hits = sim.route(m_u, home)
+            else:
+                q, hits = sim.route_counts(chunk[k])
+            slot_qoe.append(q)
+            slot_hits.append(hits)
+            sim.hist.append(np.asarray(chunk[k], np.float64))
+            _policy_step(sim, algo, t, stream, ocfg)
+    return np.asarray(slot_qoe), np.asarray(slot_hits), sim
 
 
 def run_online_trace(cfg: MECConfig, ocfg: OnlineConfig, algo: str,
                      trace: Trace, stream: DecisionStream):
-    """The NumPy per-slot loop with per-slot recording.
-
-    This is THE reference slot ordering (downloads -> routing -> history
-    push -> policy) — ``run_online`` wraps it, and the scan-engine
-    equivalence checks (``tests/test_traces.py``,
-    ``benchmarks/bench_online.py``) compare against it directly, so any
-    change here is exercised by them.  Returns
-    ``(slot_qoe (T,), slot_hits (T,), sim)``.
+    """Per-user reference replay of a dense trace: same slot ordering as
+    ``replay_workload``, with QoE/hits summed user-by-user (Eq. 40's
+    original form).  The scan-engine equivalence checks
+    (``tests/test_traces.py``, ``benchmarks/bench_online.py``) compare
+    against it directly.  Returns ``(slot_qoe (T,), slot_hits (T,),
+    sim)``.
     """
-    sim = OnlineSim(cfg, ocfg, trace=trace)
-    slot_qoe, slot_hits = [], []
-    for t in range(ocfg.n_slots):
-        sim.routine_update()
-        m_u, home = sim.draw_slot_requests(t)
-        q, hits = sim.route(m_u, home)
-        slot_qoe.append(q)
-        slot_hits.append(hits)
-        counts = np.zeros((sim.N, sim.M))
-        np.add.at(counts, (home, m_u), 1.0)
-        sim.hist.append(counts)
-        if algo == "cocar-ol":
-            for n in stream.adjust_ns[t]:
-                sim.adjust_bs(n)
-        elif algo in ("lfu", "lfu-mad"):
-            _lfu_step(sim, stream.adjust_ns[t], ocfg,
-                      mad=(algo == "lfu-mad"))
-        elif algo == "random":
-            _random_step(sim, stream.adjust_ns[t], stream.u_model[t],
-                         stream.perms[t], stream.u_shrink[t], ocfg)
-        else:
-            raise ValueError(algo)
-    return np.asarray(slot_qoe), np.asarray(slot_hits), sim
+    return replay_workload(cfg, ocfg, algo,
+                           DenseWorkload(trace, cfg.n_bs, cfg.n_models),
+                           stream, per_user=True)
 
 
 def _freq_weighted(sim: OnlineSim, mad: bool):

@@ -12,9 +12,11 @@ values, the LP objective, and the post-repair window metrics.
 ``backend="host"`` keeps the NumPy round+repair loop (the reference
 path) behind the same interface.
 
-Online: ``run_online_sweep`` crosses config variants with *trace families*
-(``repro.traces``: flash crowds, diurnal load, MMPP bursts, mobility, …)
-and policies, and runs the whole grid in ONE ``lax.scan``+vmap dispatch
+Online: ``run_online_sweep`` crosses config variants with *workload
+families* (``repro.traces.make_workload``: flash crowds, diurnal load,
+MMPP bursts, mobility, streaming Poisson arrivals, …) and policies, and
+runs the whole grid — aggregated per-(BS, model) demand tensors, never
+per-user ones — in ONE ``lax.scan``+vmap dispatch
 (``repro.traces.engine.run_online_grid``) instead of per-scenario Python
 slot loops.
 
@@ -210,51 +212,59 @@ def _policy_rows(cfgs, axes, met, n_seeds):
     return rows, summary
 
 
-#: Default online sweep: 2 config axes x 2 trace families x 2 policies
+#: Default online sweep: 2 config axes x 2 workload families x 2 policies
 #: = 16 scenarios, one vmapped scan dispatch.
 DEFAULT_ONLINE_AXES = {
     "zipf": (0.4, 0.8),
     "mem_capacity_mb": (300.0, 500.0),
 }
-DEFAULT_TRACES = ("stationary", "flash_crowd")
+DEFAULT_WORKLOADS = ("stationary", "flash_crowd")
+DEFAULT_TRACES = DEFAULT_WORKLOADS          # back-compat alias
 DEFAULT_POLICIES = ("cocar-ol", "lfu")
 
 
 def run_online_sweep(base: MECConfig = None, axes: dict = None,
-                     traces=DEFAULT_TRACES, policies=DEFAULT_POLICIES,
+                     workloads=None, policies=DEFAULT_POLICIES,
                      ocfg=None, seed: int = 0, backend: str = "vmap",
                      devices: int = None, chunk_size: int = 0,
-                     diagnostics: bool = False):
-    """Cross (config grid x trace family x policy), run everything in one
-    vmapped scan dispatch (``backend="sharded"`` spreads it across a
-    host-device mesh).  ``diagnostics=True`` taps the per-slot cache
-    telemetry inside the scan (hit rate, downloads in flight, evictions,
-    cache occupancy) and adds summary columns — decisions and QoE stay
-    bit-identical.  Returns a list of row dicts in grid order."""
+                     diagnostics: bool = False, traces=None):
+    """Cross (config grid x workload family x policy), run everything in
+    one vmapped scan dispatch (``backend="sharded"`` spreads it across a
+    host-device mesh).  ``workloads`` names registry families
+    (``repro.traces.make_workload`` — per-user traces and the streaming
+    ``poisson_zipf`` family alike; all flow through the unified
+    aggregated-demand engine).  ``diagnostics=True`` taps the per-slot
+    cache telemetry inside the scan (hit rate, downloads in flight,
+    evictions, cache occupancy) and adds summary columns — decisions and
+    QoE stay bit-identical.  Returns a list of row dicts in grid order;
+    ``traces=`` is the deprecated alias for ``workloads=``."""
     from repro.core.online import OnlineConfig
     from repro.traces.engine import run_online_grid
-    from repro.traces.registry import make_trace
+    from repro.traces.registry import make_workload
 
+    if traces is not None:
+        workloads = traces
+    workloads = workloads or DEFAULT_WORKLOADS
     base = base or MECConfig(n_users=150)
     axes = axes or DEFAULT_ONLINE_AXES
     ocfg = ocfg or OnlineConfig(n_slots=60)
     cfgs = config_grid(base, axes)
     jobs, keys = [], []
     for cfg in cfgs:
-        for tname in traces:
-            trace = make_trace(tname, cfg, ocfg.n_slots, seed=seed)
+        for wname in workloads:
+            wl = make_workload(wname, cfg, ocfg.n_slots, seed=seed)
             for algo in policies:
-                jobs.append(dict(cfg=cfg, algo=algo, trace=trace,
+                jobs.append(dict(cfg=cfg, algo=algo, workload=wl,
                                  seed=seed))
-                keys.append((cfg, tname, algo))
+                keys.append((cfg, wl, algo))
     results = run_online_grid(jobs, ocfg, backend=backend,
                               devices=devices, chunk_size=chunk_size,
                               diagnostics=diagnostics)
     rows = []
-    for (cfg, tname, algo), res in zip(keys, results):
+    for (cfg, wl, algo), res in zip(keys, results):
         row = {k: getattr(cfg, k) for k in axes}
-        row.update(trace=tname, algo=algo, avg_qoe=res["avg_qoe"],
-                   hit_rate=res["hit_rate"])
+        row.update(workload=wl.name, family=wl.family, algo=algo,
+                   avg_qoe=res["avg_qoe"], hit_rate=res["hit_rate"])
         if "diagnostics" in res:
             d = res["diagnostics"]
             row["mean_dl_in_flight"] = float(np.mean(d["dl_in_flight"]))

@@ -2,7 +2,7 @@
 
 ``run_grid(spec)`` takes a :class:`GridSpec` describing a grid of
 independent work items — offline CoCaR windows, the five-policy
-comparison, or online (scenario × trace × policy) scan jobs — and runs
+comparison, or online (scenario × workload × policy) scan jobs — and runs
 it through three composable layers:
 
   1. **bucketed batching** (``repro.scale.buckets``): heterogeneous
@@ -14,8 +14,8 @@ it through three composable layers:
      ``jax.experimental.shard_map`` (``launch/mesh.py`` plumbing;
      ``XLA_FLAGS=--xla_force_host_platform_device_count=K`` puts K
      virtual devices on one host) — the grid axes (variants × seeds ×
-     policies / windows / trace families) all live on the stacked batch
-     axis, so "data" is the only mesh axis the executor shards;
+     policies / windows / workload families) all live on the stacked
+     batch axis, so "data" is the only mesh axis the executor shards;
   3. **chunked streaming**: the batch is dispatched in fixed-size chunks
      whose device buffers are donated (``donate_argnums``), so peak live
      memory is O(chunk), not O(grid), as grids grow to thousands of
@@ -477,7 +477,9 @@ def _policy_inner(spec: GridSpec):
 
 
 # ---------------------------------------------------------------------------
-# kind: online  (the scan engine over (scenario x trace x policy) jobs)
+# kind: online  (the scan engine over (scenario x workload x policy) jobs;
+# jobs carry aggregated-demand Workloads — grid_payloads materializes each
+# job's (T, N, M) count tensor, so no per-user tensor reaches the mesh)
 # ---------------------------------------------------------------------------
 
 def _run_online(spec: GridSpec, mesh, stats):

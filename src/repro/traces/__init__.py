@@ -1,18 +1,32 @@
-"""Trace workload subsystem: precomputed request streams + the
+"""Trace workload subsystem: aggregated demand tensors + the
 device-resident online engine.
 
-- ``repro.traces.generators`` — workload families as pure functions of a
-  PRNG key (``Trace`` tensors every policy replays identically);
-- ``repro.traces.registry`` — names them for sweeps;
+- ``repro.traces.generators`` — per-user workload families as pure
+  functions of a PRNG key (``Trace`` tensors every policy replays
+  identically);
+- ``repro.traces.workloads`` — the ``Workload`` protocol: per-slot
+  ``(n_bs, n_models)`` request-count tensors (dense/aggregated/streaming
+  Poisson/request-log families) that the engines consume, so no
+  ``(n_slots, n_users)`` tensor is ever required;
+- ``repro.traces.registry`` — names both for sweeps (``make_trace``,
+  ``make_workload``);
 - ``repro.traces.engine`` — the ``jax.lax.scan`` online engine (imported
   lazily: ``from repro.traces import engine``) that runs CoCaR-OL and the
   online baselines slot-by-slot on device, vmappable across
-  (scenario, trace, seed, policy).
+  (scenario, workload, seed, policy).
 """
 from repro.traces.generators import (DecisionStream, Trace, check_trace,
                                      default_stream, draw_decision_stream)
-from repro.traces.registry import available, default_trace, make_trace
+from repro.traces.registry import (available, available_workloads,
+                                   default_trace, default_workload,
+                                   make_trace, make_workload)
+from repro.traces.workloads import (AggregatedWorkload, DenseWorkload,
+                                    PoissonWorkload, TraceLogWorkload,
+                                    Workload, as_workload, check_workload)
 
 __all__ = ["Trace", "DecisionStream", "check_trace", "default_stream",
-           "draw_decision_stream", "available", "default_trace",
-           "make_trace"]
+           "draw_decision_stream", "available", "available_workloads",
+           "default_trace", "default_workload", "make_trace",
+           "make_workload", "Workload", "DenseWorkload",
+           "AggregatedWorkload", "PoissonWorkload", "TraceLogWorkload",
+           "as_workload", "check_workload"]

@@ -17,11 +17,18 @@ same math as a pure function of a state pytree:
     evaluated for the whole (M, H+1) candidate grid at once;
   * ``_lfu_step`` / ``_random_step`` — the online baselines.
 
-Every slot consumes only precomputed tensors (the trace's per-slot request
-counts and the pre-drawn :class:`~repro.traces.generators.DecisionStream`),
-so a whole run is ONE ``lax.scan`` dispatch, and ``run_online_grid`` vmaps
-it across (scenario × trace × seed × policy) — a 64-element online grid is
-a single XLA program instead of 64 Python slot loops.
+Every slot consumes only aggregated tensors (the workload's per-slot
+``(N, M)`` request counts and the pre-drawn
+:class:`~repro.traces.generators.DecisionStream`), so a whole run is ONE
+``lax.scan`` dispatch, and ``run_online_grid`` vmaps it across
+(scenario × workload × seed × policy) — a 64-element online grid is a
+single XLA program instead of 64 Python slot loops.  ``run_workload``
+streams a :class:`~repro.traces.workloads.Workload` through the scan in
+bounded chunks, carrying ``OnlineState`` across chunk boundaries: the
+scan is a strict fold over slots, so chunking cannot change any decision,
+and peak memory is O(chunk) — a million-user Poisson workload runs
+without ever materializing a ``(T, U)`` or even full ``(T, N, M)``
+tensor.
 
 Numerics: the engine mirrors ``OnlineSim`` op-for-op (same stable sort
 orders, same thresholds) and runs in float64 (``jax.experimental
@@ -485,22 +492,80 @@ def run_scan(params: OnlineParams, counts, stream: DecisionStream,
     return out
 
 
+def run_workload(params: OnlineParams, workload, stream: DecisionStream,
+                 algo: str = "cocar-ol", dT_past: int = 10,
+                 diagnostics: bool = False, chunk_slots: int = 0):
+    """Stream a :class:`~repro.traces.workloads.Workload` through the
+    compiled scan in bounded chunks.
+
+    ``chunk_slots`` <= 0 defers to the workload's own preference (whole
+    horizon for small exact families, a bounded default for streaming
+    ones).  The ``OnlineState`` carry crosses chunk boundaries, so the
+    slot trajectory — and every cache decision — is identical to the
+    one-shot scan; at most two chunk lengths (full + tail) ever compile.
+    Returns the ``run_scan`` summary dict.
+    """
+    from jax.experimental import enable_x64
+
+    st = init_state(params, dT_past)
+    fn = _compiled(bool(diagnostics))
+    pid = _policy_id(algo)
+    qoes, hitss, diags, total = [], [], [], 0.0
+    with enable_x64():
+        for t0, t1, counts in workload.iter_chunks(chunk_slots):
+            counts = np.asarray(counts, np.float64)
+            total += float(counts.sum())
+            st, qoe, hits, diag = fn(
+                params, st, counts, stream.adjust_ns[t0:t1],
+                stream.u_model[t0:t1], stream.perms[t0:t1],
+                stream.u_shrink[t0:t1], pid)
+            qoes.append(np.asarray(qoe))
+            hitss.append(np.asarray(hits))
+            if diagnostics:
+                diags.append({k: np.asarray(v) for k, v in diag.items()})
+    qoe, hits = np.concatenate(qoes), np.concatenate(hitss)
+    out = {
+        "avg_qoe": float(qoe.sum()) / max(total, 1.0),
+        "hit_rate": float(hits.sum()) / max(total, 1.0),
+        "slot_qoe": qoe,
+        "slot_hits": hits,
+        "final_state": OnlineState(*(np.asarray(x) for x in st)),
+    }
+    if diagnostics:
+        out["diagnostics"] = {
+            k: np.concatenate([d[k] for d in diags]) for k in diags[0]}
+    return out
+
+
 def run_online_scan(cfg, ocfg, algo: str = "cocar-ol", seed: int = 0,
                     trace=None, stream: DecisionStream = None,
                     diagnostics: bool = False):
-    """Drop-in scan-engine counterpart of ``online.run_online``."""
+    """Deprecated shim over the unified API (kept for one release).
+
+    Use ``repro.core.online.run_online(workload, policy, cfg=..., ocfg=...,
+    engine="scan")`` — this wrapper derives the same default trace/stream
+    it always did, wraps the trace as a ``DenseWorkload``, and routes
+    through ``run_workload``, so results are identical to the old path.
+    """
+    import warnings
     from dataclasses import replace
 
     from repro.traces.registry import default_trace
+    from repro.traces.workloads import DenseWorkload
 
+    warnings.warn(
+        "run_online_scan(cfg, ocfg, ...) is deprecated; build a Workload "
+        "(repro.traces.make_workload / as_workload) and call "
+        "repro.core.online.run_online(workload, policy, cfg=cfg, "
+        "ocfg=ocfg, engine='scan')", DeprecationWarning, stacklevel=2)
     cfg = replace(cfg, seed=seed)
     trace = trace or default_trace(cfg, ocfg)
     check_trace(trace, cfg, ocfg)
     stream = stream or default_stream(cfg, ocfg, seed)
-    params = make_params(cfg, ocfg)
-    counts = trace.counts(cfg.n_bs, cfg.n_models)
-    return run_scan(params, counts, stream, algo, dT_past=ocfg.dT_past,
-                    diagnostics=diagnostics)
+    return run_workload(make_params(cfg, ocfg),
+                        DenseWorkload(trace, cfg.n_bs, cfg.n_models),
+                        stream, algo, dT_past=ocfg.dT_past,
+                        diagnostics=diagnostics)
 
 
 def grid_payloads(jobs, ocfg):
@@ -515,15 +580,21 @@ def grid_payloads(jobs, ocfg):
     from dataclasses import replace
 
     from repro.traces.registry import default_trace
+    from repro.traces.workloads import as_workload, check_workload
 
     payloads = []
     for j in jobs:
         seed = j.get("seed", 0)        # same default as run_online
         cfg = replace(j["cfg"], seed=seed)
-        trace = j.get("trace") or default_trace(cfg, ocfg)
-        check_trace(trace, cfg, ocfg)
+        if j.get("workload") is not None:
+            wl = check_workload(as_workload(j["workload"], cfg=cfg),
+                                cfg, ocfg)
+            counts = wl.counts()
+        else:
+            trace = j.get("trace") or default_trace(cfg, ocfg)
+            check_trace(trace, cfg, ocfg)
+            counts = trace.counts(cfg.n_bs, cfg.n_models)
         stream = j.get("stream") or default_stream(cfg, ocfg, seed)
-        counts = trace.counts(cfg.n_bs, cfg.n_models)
         payloads.append({
             "params": make_params(cfg, ocfg),
             "counts": counts,
@@ -541,9 +612,10 @@ def run_online_grid(jobs, ocfg, backend: str = "vmap",
     dispatch per shape bucket, via the ``repro.scale`` grid executor.
 
     ``jobs`` is a list of dicts with keys ``cfg`` (MECConfig), ``algo``
-    (policy name), and optionally ``trace`` (a Trace; default workload
-    otherwise) and ``seed``.  Heterogeneous (n_bs, n_models, n_slots)
-    grids are bucketed by shape — each bucket is one dispatch.
+    (policy name), and optionally ``workload`` (anything ``as_workload``
+    accepts) or ``trace`` (a Trace; the default workload when neither is
+    given) and ``seed``.  Heterogeneous (n_bs, n_models, n_slots) grids
+    are bucketed by shape — each bucket is one dispatch.
     ``backend="sharded"`` partitions every bucket's batch across a
     ``devices``-wide host mesh; ``chunk_size`` streams it in bounded
     chunks.  Returns one summary dict per job, in order.

@@ -316,20 +316,30 @@ def default_stream(cfg, ocfg, seed: int) -> DecisionStream:
 
 def check_trace(trace: Trace, cfg, ocfg) -> Trace:
     """Validate a user-supplied trace against the run's shape (a silent
-    mismatch would mis-normalize avg QoE or crash deep in the engines)."""
+    mismatch would mis-normalize avg QoE or crash deep in the engines).
+
+    Errors name the trace *and* its registry family and show the
+    ``make_trace`` call that rebuilds it for this config — a registry-
+    built grid mixes many (name, cfg) pairs and "has 60 users" alone does
+    not say which entry to regenerate.
+    """
+    family = str(trace.meta.get("family", trace.name))
+    hint = (f"rebuild it for this config with make_trace({family!r}, cfg, "
+            f"n_slots={ocfg.n_slots}, seed=...) or pick a family from "
+            f"repro.traces.available()")
     if trace.n_slots != ocfg.n_slots:
         raise ValueError(
-            f"trace {trace.name!r} has {trace.n_slots} slots but the run "
-            f"needs ocfg.n_slots={ocfg.n_slots}; generate it with "
-            f"n_slots={ocfg.n_slots}")
+            f"trace {trace.name!r} (family {family!r}) has "
+            f"{trace.n_slots} slots but the run needs "
+            f"ocfg.n_slots={ocfg.n_slots}; {hint}")
     if trace.n_users != cfg.n_users:
         raise ValueError(
-            f"trace {trace.name!r} has {trace.n_users} users but "
-            f"cfg.n_users={cfg.n_users}")
+            f"trace {trace.name!r} (family {family!r}) was generated for "
+            f"{trace.n_users} users but cfg.n_users={cfg.n_users}; {hint}")
     if trace.home.max() >= cfg.n_bs or trace.model.max() >= cfg.n_models:
         raise ValueError(
-            f"trace {trace.name!r} indexes BS/model outside "
-            f"(n_bs={cfg.n_bs}, n_models={cfg.n_models})")
+            f"trace {trace.name!r} (family {family!r}) indexes BS/model "
+            f"outside (n_bs={cfg.n_bs}, n_models={cfg.n_models}); {hint}")
     return trace
 
 

@@ -1,15 +1,24 @@
-"""Named trace families for sweeps.
+"""Named trace and workload families for sweeps.
 
 ``make_trace("flash_crowd", cfg, n_slots, seed=3, intensity=0.9)`` builds a
-replayable workload for a scenario config; ``default_trace`` reproduces the
-legacy ``OnlineSim`` workload (popularity drift when
+replayable per-user workload for a scenario config; ``default_trace``
+reproduces the legacy ``OnlineSim`` workload (popularity drift when
 ``ocfg.pop_change_every`` is set, stationary Zipf otherwise) so the
 refactored online driver is a drop-in.
+
+``make_workload`` is the aggregated-demand counterpart: every per-user
+family is available as an exact :class:`~repro.traces.workloads
+.DenseWorkload`, plus the streaming families that never materialize a
+``(T, U)`` tensor — ``"poisson_zipf"`` (sampled Poisson + Zipf arrivals,
+the million-user family) and ``"request_log"`` (exact replay of measured
+``(slot, home, model)`` request-log arrays).
 """
 from __future__ import annotations
 
 from repro.traces import generators as G
 from repro.traces.generators import Trace
+from repro.traces.workloads import (DenseWorkload, PoissonWorkload,
+                                    TraceLogWorkload, Workload)
 
 REGISTRY = {
     "stationary": G.stationary,
@@ -20,9 +29,21 @@ REGISTRY = {
     "mobility": G.mobility,
 }
 
+#: workload families beyond the per-user traces: family -> kind
+STREAMING = {
+    "poisson_zipf": "sampled Poisson + Zipf arrivals (streaming, O(chunk))",
+    "request_log": "exact replay of (slot, home, model) request-log arrays",
+}
+
 
 def available():
     return sorted(REGISTRY)
+
+
+def available_workloads():
+    """Every name ``make_workload`` accepts: the per-user trace families
+    (exact aggregation) plus the streaming families."""
+    return sorted(REGISTRY) + sorted(STREAMING)
 
 
 def make_trace(name: str, cfg, n_slots: int, seed: int = 0, **kw) -> Trace:
@@ -38,7 +59,36 @@ def make_trace(name: str, cfg, n_slots: int, seed: int = 0, **kw) -> Trace:
         raise KeyError(
             f"unknown trace family {name!r}; available: {available()}")
     kw.setdefault("zipf", cfg.zipf)
-    return gen(seed, n_slots, cfg.n_users, cfg.n_bs, cfg.n_models, **kw)
+    tr = gen(seed, n_slots, cfg.n_users, cfg.n_bs, cfg.n_models, **kw)
+    tr.meta.setdefault("family", name)
+    return tr
+
+
+def make_workload(name: str, cfg, n_slots: int, seed: int = 0,
+                  **kw) -> Workload:
+    """Build workload ``name`` for a config as aggregated demand.
+
+    Per-user families come back as exact :class:`DenseWorkload`\\ s (their
+    ``kw`` are the trace family's parameters).  ``"poisson_zipf"`` takes
+    ``users_per_slot`` (default ``cfg.n_users``) and ``zipf``/
+    ``chunk_slots``; ``"request_log"`` takes ``slot``/``home``/``model``
+    arrays (one entry per request).
+    """
+    if name in REGISTRY:
+        return DenseWorkload(make_trace(name, cfg, n_slots, seed=seed, **kw),
+                             cfg.n_bs, cfg.n_models)
+    if name == "poisson_zipf":
+        kw.setdefault("zipf", cfg.zipf)
+        kw.setdefault("users_per_slot", cfg.n_users)
+        return PoissonWorkload(n_slots, cfg.n_bs, cfg.n_models,
+                               seed=seed, **kw)
+    if name == "request_log":
+        return TraceLogWorkload(kw.pop("slot"), kw.pop("home"),
+                                kw.pop("model"), n_slots=n_slots,
+                                n_bs=cfg.n_bs, n_models=cfg.n_models, **kw)
+    raise KeyError(
+        f"unknown workload family {name!r}; available: "
+        f"{available_workloads()}")
 
 
 def default_trace(cfg, ocfg, seed: int | None = None) -> Trace:
@@ -51,3 +101,9 @@ def default_trace(cfg, ocfg, seed: int | None = None) -> Trace:
                           change_every=ocfg.pop_change_every,
                           warmup=ocfg.pop_warmup)
     return make_trace("stationary", cfg, ocfg.n_slots, seed=seed)
+
+
+def default_workload(cfg, ocfg, seed: int | None = None) -> Workload:
+    """The legacy workload wrapped as aggregated demand (exact)."""
+    return DenseWorkload(default_trace(cfg, ocfg, seed=seed),
+                         cfg.n_bs, cfg.n_models)

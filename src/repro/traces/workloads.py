@@ -1,0 +1,305 @@
+"""The ``Workload`` protocol: aggregated per-(BS, model) demand tensors.
+
+Eq. 40 QoE and the Eq. 45-49 caching updates are sums over the users that
+share a (home BS, requested model) pair, so the per-slot ``(n_bs,
+n_models)`` request-count tensor is an *exact* representation of demand —
+the engines never need the dense per-user ``(n_slots, n_users)`` tensors.
+This module puts that representation behind one small protocol:
+
+  * :class:`Workload` — the abstract surface every online caller consumes:
+    ``counts_chunk(t0, t1) -> (t1-t0, N, M)`` float64 counts, plus
+    ``counts()``/``iter_chunks()``/``total()`` conveniences and the
+    ``exact`` flag (True when counts are an exact aggregation of a
+    per-user stream, False when they are sampled directly);
+  * :class:`DenseWorkload` — wraps a per-user :class:`Trace` (exact; the
+    only family that can also replay per-user, which the equivalence
+    certificates use as the bit-reference);
+  * :class:`AggregatedWorkload` — wraps a precomputed ``(T, N, M)`` count
+    tensor (exact; e.g. replayed from a previous run's aggregation);
+  * :class:`PoissonWorkload` — streaming Poisson + Zipf arrivals generated
+    chunk-by-chunk (sampled; the million-user family: memory is O(chunk),
+    and per-slot counter-based keys make the draw independent of the
+    chunk layout);
+  * :class:`TraceLogWorkload` — fed from request-log arrays ``(slot, home
+    BS, model)`` (exact; the trace-driven family — icarus-style replay of
+    measured logs without materializing ``(T, U)`` tensors).
+
+``as_workload`` coerces the legacy currencies (a ``Trace``, a raw count
+tensor) and ``check_workload`` validates shapes against a run's
+``(cfg, ocfg)`` the way ``check_trace`` does for dense traces.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.traces.generators import (Trace, _key, _per_bs_pop, check_trace)
+
+
+class Workload:
+    """Aggregated demand over ``n_slots`` slots of an online run.
+
+    Subclasses set ``name``, ``family``, ``n_slots``, ``n_bs``,
+    ``n_models``, ``exact``, ``meta`` and implement
+    :meth:`counts_chunk`.  ``chunk_slots`` is the family's preferred
+    streaming granularity (0 = materialize the whole horizon at once,
+    right for small exact families; streaming families set a bounded
+    default so no caller accidentally materializes the full horizon).
+    """
+
+    name: str = "workload"
+    family: str = "workload"
+    n_slots: int = 0
+    n_bs: int = 0
+    n_models: int = 0
+    exact: bool = True
+    chunk_slots: int = 0
+
+    def __init__(self):
+        self.meta: dict = {}
+        self._total = None
+
+    # -- the protocol ------------------------------------------------------
+    def counts_chunk(self, t0: int, t1: int) -> np.ndarray:
+        """Per-slot request counts for slots ``[t0, t1)`` as a
+        ``(t1 - t0, n_bs, n_models)`` float64 array.  Must be a pure
+        function of ``(self, t0, t1)`` and independent of how the horizon
+        is chunked."""
+        raise NotImplementedError
+
+    # -- conveniences ------------------------------------------------------
+    def counts(self) -> np.ndarray:
+        """The full ``(n_slots, n_bs, n_models)`` tensor (fine for grid
+        payloads and small runs; streaming callers use iter_chunks)."""
+        return self.counts_chunk(0, self.n_slots)
+
+    def iter_chunks(self, chunk_slots: int = 0):
+        """Yield ``(t0, t1, counts)`` covering ``[0, n_slots)`` in order.
+
+        ``chunk_slots`` <= 0 falls back to the family's own
+        ``chunk_slots`` default (whole horizon when that is 0 too).
+        """
+        step = int(chunk_slots) if chunk_slots and chunk_slots > 0 \
+            else (self.chunk_slots or self.n_slots)
+        for t0 in range(0, self.n_slots, max(step, 1)):
+            t1 = min(t0 + step, self.n_slots)
+            yield t0, t1, self.counts_chunk(t0, t1)
+
+    def total(self) -> float:
+        """Total requests over the horizon (normalizes avg QoE)."""
+        if self._total is None:
+            self._total = float(sum(
+                float(c.sum()) for _, _, c in self.iter_chunks()))
+        return self._total
+
+    def __repr__(self):
+        return (f"{type(self).__name__}(name={self.name!r}, "
+                f"family={self.family!r}, n_slots={self.n_slots}, "
+                f"n_bs={self.n_bs}, n_models={self.n_models}, "
+                f"exact={self.exact})")
+
+
+class DenseWorkload(Workload):
+    """Exact aggregation of a per-user :class:`Trace`.
+
+    Keeps the trace around: this is the only family that can also replay
+    per-user (``OnlineSim.route``), which the decision-identity
+    certificates use as the bit-reference at small U.
+    """
+
+    exact = True
+
+    def __init__(self, trace: Trace, n_bs: int, n_models: int):
+        super().__init__()
+        self.trace = trace
+        self.name = trace.name
+        self.family = str(trace.meta.get("family", trace.name))
+        self.n_slots = trace.n_slots
+        self.n_bs = int(n_bs)
+        self.n_models = int(n_models)
+        self.meta = dict(trace.meta, n_users=trace.n_users)
+        self._counts = None
+
+    @property
+    def n_users(self) -> int:
+        return self.trace.n_users
+
+    def counts(self) -> np.ndarray:
+        if self._counts is None:
+            self._counts = self.trace.counts(self.n_bs, self.n_models)
+        return self._counts
+
+    def counts_chunk(self, t0, t1):
+        return self.counts()[t0:t1]
+
+
+class AggregatedWorkload(Workload):
+    """A precomputed ``(T, N, M)`` count tensor, taken as-is."""
+
+    exact = True
+    family = "aggregated"
+
+    def __init__(self, counts: np.ndarray, name: str = "aggregated",
+                 meta: dict | None = None):
+        super().__init__()
+        counts = np.asarray(counts, dtype=np.float64)
+        if counts.ndim != 3:
+            raise ValueError(
+                f"aggregated workload {name!r} needs a (n_slots, n_bs, "
+                f"n_models) count tensor, got shape {counts.shape}")
+        self._counts = counts
+        self.name = name
+        self.n_slots, self.n_bs, self.n_models = counts.shape
+        self.meta = dict(meta or {})
+
+    def counts_chunk(self, t0, t1):
+        return self._counts[t0:t1]
+
+
+class PoissonWorkload(Workload):
+    """Streaming Poisson + Zipf arrivals — the million-user family.
+
+    Per slot, the request count at (BS n, model m) is Poisson with mean
+    ``users_per_slot / n_bs * pop[n, m]`` where ``pop`` is the same
+    per-BS-permuted Zipf popularity the dense families use (each user
+    picks a home uniformly and a model from its home's popularity; at
+    large U the multinomial cell counts are Poisson to within O(1/U)).
+    Counts are drawn with a counter-based generator keyed on
+    ``(seed, slot)``, so ``counts_chunk`` is a pure function of the slot
+    range — chunk layout cannot change the stream.  Memory is O(chunk):
+    no per-user tensor ever exists at any U.
+    """
+
+    exact = False
+    family = "poisson_zipf"
+
+    def __init__(self, n_slots: int, n_bs: int, n_models: int,
+                 users_per_slot: float, *, zipf: float = 0.8, seed: int = 0,
+                 chunk_slots: int = 64, name: str = "poisson_zipf"):
+        super().__init__()
+        import jax
+
+        self.name = name
+        self.n_slots = int(n_slots)
+        self.n_bs = int(n_bs)
+        self.n_models = int(n_models)
+        self.users_per_slot = float(users_per_slot)
+        self.seed = int(seed)
+        self.chunk_slots = int(chunk_slots)
+        # same popularity derivation as generators.stationary: split the
+        # family key and permute the Zipf ranks independently per BS
+        k_pop, _ = jax.random.split(_key(self.seed))
+        self.pop = _per_bs_pop(k_pop, self.n_bs, self.n_models, zipf)
+        self._lam = self.users_per_slot / self.n_bs * self.pop
+        self.meta = {"zipf": zipf, "users_per_slot": self.users_per_slot,
+                     "seed": self.seed}
+
+    def counts_chunk(self, t0, t1):
+        out = np.empty((t1 - t0, self.n_bs, self.n_models))
+        for k, t in enumerate(range(t0, t1)):
+            rng = np.random.Generator(np.random.Philox(key=[self.seed, t]))
+            out[k] = rng.poisson(self._lam)
+        return out
+
+    def total(self) -> float:
+        if self._total is None:
+            self._total = float(sum(
+                float(c.sum()) for _, _, c in self.iter_chunks()))
+        return self._total
+
+
+class TraceLogWorkload(Workload):
+    """Exact aggregation of request-log arrays ``(slot, home, model)``.
+
+    The log is sorted by slot once at construction; ``counts_chunk`` then
+    touches only the O(requests-in-chunk) span via ``searchsorted``
+    boundaries, so replaying a measured log never materializes a
+    ``(T, U)`` tensor either.
+    """
+
+    exact = True
+    family = "request_log"
+
+    def __init__(self, slot, home, model, *, n_slots: int, n_bs: int,
+                 n_models: int, name: str = "request_log",
+                 meta: dict | None = None):
+        super().__init__()
+        slot = np.asarray(slot, dtype=np.int64).ravel()
+        home = np.asarray(home, dtype=np.int64).ravel()
+        model = np.asarray(model, dtype=np.int64).ravel()
+        if not (slot.shape == home.shape == model.shape):
+            raise ValueError(
+                f"request log {name!r}: slot/home/model arrays must have "
+                f"one entry per request, got shapes {slot.shape}, "
+                f"{home.shape}, {model.shape}")
+        self.name = name
+        self.n_slots = int(n_slots)
+        self.n_bs = int(n_bs)
+        self.n_models = int(n_models)
+        self.meta = dict(meta or {}, n_requests=int(slot.size))
+        for arr, what, hi in ((slot, "slot", self.n_slots),
+                              (home, "home BS", self.n_bs),
+                              (model, "model", self.n_models)):
+            if arr.size and (arr.min() < 0 or arr.max() >= hi):
+                raise ValueError(
+                    f"request log {name!r}: {what} indexes outside "
+                    f"[0, {hi})")
+        order = np.argsort(slot, kind="stable")
+        self._slot = slot[order]
+        self._flat = home[order] * self.n_models + model[order]
+        self._starts = np.searchsorted(self._slot,
+                                       np.arange(self.n_slots + 1))
+        self._total = float(slot.size)
+
+    def counts_chunk(self, t0, t1):
+        lo, hi = self._starts[t0], self._starts[t1]
+        out = np.zeros((t1 - t0, self.n_bs * self.n_models))
+        np.add.at(out, (self._slot[lo:hi] - t0, self._flat[lo:hi]), 1.0)
+        return out.reshape(t1 - t0, self.n_bs, self.n_models)
+
+
+def as_workload(obj, cfg=None, *, n_bs=None, n_models=None) -> Workload:
+    """Coerce the legacy currencies into a :class:`Workload`.
+
+    Accepts a ``Workload`` (returned as-is), a per-user :class:`Trace`
+    (wrapped in :class:`DenseWorkload` — needs ``cfg`` or explicit
+    ``n_bs``/``n_models`` for the aggregation shape) or a ``(T, N, M)``
+    array (wrapped in :class:`AggregatedWorkload`).
+    """
+    if isinstance(obj, Workload):
+        return obj
+    if isinstance(obj, Trace):
+        if cfg is not None:
+            n_bs = cfg.n_bs if n_bs is None else n_bs
+            n_models = cfg.n_models if n_models is None else n_models
+        if n_bs is None or n_models is None:
+            raise ValueError(
+                "wrapping a Trace needs the aggregation shape: pass cfg= "
+                "or n_bs=/n_models=")
+        return DenseWorkload(obj, n_bs, n_models)
+    if isinstance(obj, np.ndarray):
+        return AggregatedWorkload(obj)
+    raise TypeError(
+        f"cannot interpret {type(obj).__name__} as a workload; expected "
+        f"Workload, Trace, or a (n_slots, n_bs, n_models) count array")
+
+
+def check_workload(wl: Workload, cfg, ocfg) -> Workload:
+    """Validate a workload against the run's shape, mirroring
+    ``check_trace`` (and delegating to it for dense families so the
+    per-user tensors are vetted too)."""
+    hint = (f"build one for this config with make_workload("
+            f"{wl.family!r}, cfg, n_slots={ocfg.n_slots}) — see "
+            f"repro.traces.available_workloads()")
+    if wl.n_slots != ocfg.n_slots:
+        raise ValueError(
+            f"workload {wl.name!r} (family {wl.family!r}) covers "
+            f"{wl.n_slots} slots but the run needs "
+            f"ocfg.n_slots={ocfg.n_slots}; {hint}")
+    if wl.n_bs != cfg.n_bs or wl.n_models != cfg.n_models:
+        raise ValueError(
+            f"workload {wl.name!r} (family {wl.family!r}) aggregates over "
+            f"(n_bs={wl.n_bs}, n_models={wl.n_models}) but the config has "
+            f"(n_bs={cfg.n_bs}, n_models={cfg.n_models}); {hint}")
+    if isinstance(wl, DenseWorkload):
+        check_trace(wl.trace, cfg, ocfg)
+    return wl

@@ -209,13 +209,18 @@ def test_online_sweep_rows():
 
     rows = run_online_sweep(
         base=CFG, axes={"mem_capacity_mb": (300.0, 500.0)},
-        traces=("stationary", "drift"), policies=("cocar-ol", "lfu"),
+        workloads=("stationary", "drift"), policies=("cocar-ol", "lfu"),
         ocfg=OCFG)
     assert len(rows) == 8
     for r in rows:
-        assert set(r) == {"mem_capacity_mb", "trace", "algo", "avg_qoe",
-                          "hit_rate"}
+        assert set(r) == {"mem_capacity_mb", "workload", "family", "algo",
+                          "avg_qoe", "hit_rate"}
         assert 0.0 <= r["avg_qoe"] <= 1.0
+    # the deprecated traces= alias feeds the same path
+    alias = run_online_sweep(
+        base=CFG, axes={"mem_capacity_mb": (300.0,)},
+        traces=("stationary",), policies=("cocar-ol",), ocfg=OCFG)
+    assert alias[0]["workload"] == "stationary"
 
 
 # ---------------------------------------------------------------------------
