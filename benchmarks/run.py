@@ -9,8 +9,8 @@ from __future__ import annotations
 import time
 
 from benchmarks import (bench_baselines, bench_kernels, bench_lp,
-                        bench_offline, bench_online, common,
-                        motivating_example, roofline, serving_slo, tables)
+                        bench_offline, bench_online, bench_serving, common,
+                        motivating_example, roofline, tables)
 
 
 def _emit_offline(name, res):
@@ -61,7 +61,7 @@ def main() -> None:
                    f"variants={len(sw['rows'])};"
                    f"total_s={sw['seconds']:.2f}")
 
-    serving_slo.main()
+    bench_serving.main()
     bench_lp.main()
     bench_online.main()
     bench_offline.main()

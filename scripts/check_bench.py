@@ -96,6 +96,36 @@ MANIFEST = {
                         "comparison.n_users", "comparison.best_of",
                         "comparison.pdhg_iters", "comparison.episodes"],
     },
+    "BENCH_serving.json": {
+        # closed-loop serving runs at ONE fixed scale on every CI path
+        # (smoke == full), so all gates engage everywhere
+        "scale": ["offline.n_pods", "offline.n_models", "offline.n_users",
+                  "offline.n_windows", "offline.pdhg_iters",
+                  "offline.duration_s"],
+        "ratios": [],
+        # catalog D_m seconds vs the loader's actual transfer seconds:
+        # the same byte math, so the gap must stay at zero
+        "gaps": ["agreement.max_transfer_gap_s"],
+        # the decision bridge's contract: residencies come from the
+        # control plane (never hand-constructed), the measured catalog's
+        # bandwidth sits in the Table III band, CoCaR's ranking survives
+        # simulated loading delay, Eq. 37's mid-download invariant holds
+        # non-vacuously with numpy/scan state parity, and a plan reaches
+        # real running weights in the cluster
+        "flags": ["offline.decisions_from_control_plane",
+                  "offline.ranking_preserved",
+                  "offline.catalog.crosscheck.ok",
+                  "online.states_equal_numpy_scan",
+                  "online.mid_download_never_serves",
+                  "online.in_flight_nonvacuous",
+                  "cluster.real_generation"],
+        # the headline margin: CoCaR's delivered precision under loading
+        # delay over the best baseline's
+        "drifts": [("offline.cocar_over_best_baseline", 0.2)],
+        "drift_scale": ["offline.n_pods", "offline.n_models",
+                        "offline.n_users", "offline.n_windows",
+                        "offline.pdhg_iters", "offline.duration_s"],
+    },
     "BENCH_lp.json": {
         "scale": ["step.iters", "step.n_users_max", "grid.variants",
                   "grid.n_users", "grid.pdhg_iters"],

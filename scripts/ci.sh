@@ -58,6 +58,13 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     JAX_ENABLE_X64=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.bench_scale --smoke
+# closed-loop serving smoke: control-plane decisions -> ServingPlan ->
+# queue simulator under measured loading times.  Runs at the SAME fixed
+# scale as the committed baseline, so check_bench's flags (ranking
+# survives loading delay, Eq. 37 mid-download invariant, Table III
+# cross-check) and the cocar_over_best_baseline drift all engage here
+JAX_ENABLE_X64=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.bench_serving --smoke
 # observability smoke (repro.obs): a tiny sharded offline sweep with the
 # jit-safe diagnostics taps ON, then report.py over its artifacts —
 # manifests, span traces, and the convergence gate (every smoke window

@@ -198,7 +198,11 @@ def report_bench(root):
             ("solve.pdhg_final_residual", "solve residual"),
             ("solve.pdhg_converged", "solve converged"),
             ("identity.decisions_identical", "aggregated==per-user"),
-            ("scale.peak_host_mb", "U=1e6 peak host MB"))
+            ("scale.peak_host_mb", "U=1e6 peak host MB"),
+            ("offline.ranking_preserved", "serving ranking preserved"),
+            ("offline.cocar_over_best_baseline", "serving cocar/best"),
+            ("online.mid_download_never_serves", "mid-download never serves"),
+            ("agreement.max_transfer_gap_s", "catalog vs loader gap s"))
     lines = []
     for p in sorted(root.glob("BENCH_*.json")):
         payload = _load_json(p)

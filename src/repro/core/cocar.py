@@ -418,6 +418,31 @@ def policy_grid_host(stacked: StackedWindows, uniforms, gat,
     return results
 
 
+def export_cache_plans(out, stacked: StackedWindows, seed_idx: int = 0):
+    """Slice a ``policy_grid_device`` output into per-policy, per-window
+    decision arrays at true (unpadded) shapes — the control-plane export
+    the serving bridge (``repro.serving.plan.plan_from_offline``)
+    consumes.
+
+    Returns ``{policy: [{"x": (N, M, H+1), "A": (N, U, H),
+    "metrics": {...}} per window]}`` for one rounding seed — the actual
+    integral caching/routing decisions each policy committed to, never a
+    hand-constructed residency profile.
+    """
+    plans = {}
+    for p in OFFLINE_POLICIES:
+        per_window = []
+        for i, inst in enumerate(stacked.insts):
+            per_window.append({
+                "x": np.asarray(out[p]["x"][i, seed_idx, :inst.N]),
+                "A": np.asarray(out[p]["A"][i, seed_idx,
+                                            :inst.N, :inst.U]),
+                "metrics": {k: float(v[i, seed_idx])
+                            for k, v in out[p]["metrics"].items()}})
+        plans[p] = per_window
+    return plans
+
+
 def improvement_ratio(metrics_by_policy, key: str = "avg_precision"):
     """The paper's headline number (Sec. VII-B): grid-mean CoCaR ``key``
     over the best baseline's.  ``metrics_by_policy[p]`` is any array of

@@ -25,20 +25,20 @@ the aggregation is exact; only the optional per-user reference replay
 single entry point every caller (sweep, grid executor, examples, benches)
 routes through; ``engine="scan"`` dispatches to the vectorized
 ``jax.lax.scan`` engine (``repro.traces.engine``), which matches this
-NumPy state machine slot-for-slot.  The legacy signature
-``run_online(cfg, ocfg, algo, trace=..., backend=...)`` remains as a
-deprecated shim for one release.
+NumPy state machine slot-for-slot.  ``record_states=True`` additionally
+exports the per-slot serving cache states (level / download-in-flight /
+target) that ``repro.serving.plan`` turns into per-pod residency
+schedules.
 """
 from __future__ import annotations
 
-import warnings
 from collections import deque
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.mec.scenario import MECConfig, Scenario
-from repro.traces.generators import DecisionStream, Trace, check_trace, default_stream
+from repro.traces.generators import DecisionStream, Trace, default_stream
 from repro.traces.registry import default_trace
 from repro.traces.workloads import DenseWorkload, Workload, as_workload, check_workload
 
@@ -70,9 +70,10 @@ class OnlineSim:
     """
 
     def __init__(self, cfg: MECConfig, ocfg: OnlineConfig,
-                 trace: Trace = None, workload: Workload = None):
+                 trace: Trace = None, workload: Workload = None,
+                 scenario: Scenario = None):
         self.cfg, self.ocfg = cfg, ocfg
-        self.sc = Scenario(cfg)
+        self.sc = scenario or Scenario(cfg)
         N, M, H = cfg.n_bs, cfg.n_models, self.sc.sizes.shape[1] - 1
         self.N, self.M, self.H = N, M, H
         if workload is not None:
@@ -337,14 +338,14 @@ class OnlineSim:
 # drivers
 # ---------------------------------------------------------------------------
 
-def run_online(workload=None, policy: str = "cocar-ol", *args, **kw):
+def run_online(workload, policy: str = "cocar-ol", *,
+               cfg: MECConfig = None, ocfg: OnlineConfig = None,
+               engine: str = "scan", seed: int = 0,
+               stream: DecisionStream = None, chunk_slots: int = 0,
+               diagnostics: bool = False, record_states: bool = False,
+               scenario: Scenario = None):
     """Run one (scenario, workload, policy) online episode — the unified
     entry point every online caller routes through.
-
-    New API::
-
-        run_online(workload, policy, *, cfg=..., ocfg=..., engine="scan",
-                   seed=0, stream=None, chunk_slots=0, diagnostics=False)
 
     ``workload`` is anything ``repro.traces.as_workload`` accepts (a
     ``Workload``, a per-user ``Trace``, or a ``(T, N, M)`` count tensor);
@@ -354,27 +355,17 @@ def run_online(workload=None, policy: str = "cocar-ol", *args, **kw):
     decisions either way.  Returns a summary dict with ``avg_qoe``/
     ``hit_rate``, per-slot arrays, and the final cache state.
 
-    The legacy signature ``run_online(cfg, ocfg, algo, seed, trace,
-    stream, backend)`` is kept as a deprecated shim (one release): it
-    derives the same defaults it always did, wraps the trace as a
-    ``DenseWorkload``, and returns only ``{avg_qoe, hit_rate}``.
+    ``record_states=True`` adds ``out["states"]`` — per-slot serving
+    cache states ``{"lvl", "dl", "target"}``, each ``(T, N, M)``,
+    snapshotted right after the routine download update (i.e. exactly
+    the state requests are routed against, Eqs. 35–37): ``lvl`` the
+    cached submodel level (0 = not cached), ``dl`` whether a download is
+    in flight, ``target`` its target level.  This is the input of
+    ``repro.serving.plan.plans_from_online_states`` — a submodel
+    mid-download is NOT in ``lvl`` at its target and therefore never
+    serves.  ``scenario`` injects a prebuilt :class:`Scenario` (e.g. one
+    carrying a measured catalog) instead of deriving one from ``cfg``.
     """
-    if isinstance(workload, MECConfig):
-        warnings.warn(
-            "run_online(cfg, ocfg, algo, trace=..., backend=...) is "
-            "deprecated; build a Workload (repro.traces.make_workload / "
-            "as_workload) and call run_online(workload, policy, cfg=cfg, "
-            "ocfg=ocfg, engine=...)", DeprecationWarning, stacklevel=2)
-        return _run_online_legacy(workload, policy, *args, **kw)
-    return _run_online_workload(workload, policy, *args, **kw)
-
-
-def _run_online_workload(workload, policy: str = "cocar-ol", *,
-                         cfg: MECConfig = None, ocfg: OnlineConfig = None,
-                         engine: str = "scan", seed: int = 0,
-                         stream: DecisionStream = None,
-                         chunk_slots: int = 0, diagnostics: bool = False):
-    """The unified path behind ``run_online(workload, policy, ...)``."""
     if cfg is None or ocfg is None:
         raise TypeError(
             "run_online(workload, policy, ...) needs cfg= and ocfg=")
@@ -383,44 +374,27 @@ def _run_online_workload(workload, policy: str = "cocar-ol", *,
         stream = default_stream(cfg, ocfg, seed)
     if engine == "scan":
         from repro.traces.engine import make_params, run_workload
-        out = run_workload(make_params(cfg, ocfg), workload, stream,
-                           policy, dT_past=ocfg.dT_past,
+        out = run_workload(make_params(cfg, ocfg, sc=scenario), workload,
+                           stream, policy, dT_past=ocfg.dT_past,
                            diagnostics=diagnostics,
-                           chunk_slots=chunk_slots)
+                           chunk_slots=chunk_slots,
+                           record_states=record_states)
     elif engine == "numpy":
         slot_qoe, slot_hits, sim = replay_workload(
-            cfg, ocfg, policy, workload, stream, chunk_slots=chunk_slots)
+            cfg, ocfg, policy, workload, stream, chunk_slots=chunk_slots,
+            record_states=record_states, scenario=scenario)
         total = workload.total()
         out = {"avg_qoe": float(slot_qoe.sum()) / max(total, 1.0),
                "hit_rate": float(slot_hits.sum()) / max(total, 1.0),
                "slot_qoe": slot_qoe, "slot_hits": slot_hits,
                "final_state": sim.state()}
+        if record_states:
+            out["states"] = sim.recorded_states
     else:
         raise ValueError(
             f"unknown engine {engine!r}; one of ('scan', 'numpy')")
     out["workload"] = workload.name
     return out
-
-
-def _run_online_legacy(cfg: MECConfig, ocfg: OnlineConfig,
-                       algo: str = "cocar-ol", seed: int = 0,
-                       trace: Trace = None, stream: DecisionStream = None,
-                       backend: str = "numpy"):
-    """The pre-Workload signature, as a thin layer over the unified path
-    (same default trace/stream derivations, same return contract)."""
-    cfg = MECConfig(**{**cfg.__dict__, "seed": seed})
-    if trace is None:
-        trace = default_trace(cfg, ocfg)
-    check_trace(trace, cfg, ocfg)
-    if stream is None:
-        stream = default_stream(cfg, ocfg, seed)
-    engine = {"numpy": "numpy", "scan": "scan"}.get(backend)
-    if engine is None:
-        raise ValueError(f"unknown backend {backend!r}")
-    res = _run_online_workload(
-        DenseWorkload(trace, cfg.n_bs, cfg.n_models), algo,
-        cfg=cfg, ocfg=ocfg, engine=engine, stream=stream)
-    return {"avg_qoe": res["avg_qoe"], "hit_rate": res["hit_rate"]}
 
 
 def _policy_step(sim: OnlineSim, algo: str, t: int,
@@ -440,7 +414,9 @@ def _policy_step(sim: OnlineSim, algo: str, t: int,
 
 def replay_workload(cfg: MECConfig, ocfg: OnlineConfig, algo: str,
                     workload, stream: DecisionStream,
-                    per_user: bool = False, chunk_slots: int = 0):
+                    per_user: bool = False, chunk_slots: int = 0,
+                    record_states: bool = False,
+                    scenario: Scenario = None):
     """The NumPy per-slot loop over aggregated demand, with per-slot
     recording.
 
@@ -452,19 +428,26 @@ def replay_workload(cfg: MECConfig, ocfg: OnlineConfig, algo: str,
     re-derived from the per-user tensors in the original per-user
     summation order — the bit-reference the equivalence certificates
     compare against.  Streams the workload chunk-by-chunk (O(chunk)
-    memory).  Returns ``(slot_qoe (T,), slot_hits (T,), sim)``.
+    memory).  Returns ``(slot_qoe (T,), slot_hits (T,), sim)``; with
+    ``record_states`` the per-slot serving states (post-download-update
+    lvl/dl/target, the routing snapshot) land on ``sim.recorded_states``.
     """
     workload = as_workload(workload, cfg=cfg)
     if per_user and not isinstance(workload, DenseWorkload):
         raise ValueError(
             f"per-user replay needs a dense workload, got "
             f"{workload.name!r} (family {workload.family!r})")
-    sim = OnlineSim(cfg, ocfg, workload=workload)
+    sim = OnlineSim(cfg, ocfg, workload=workload, scenario=scenario)
     slot_qoe, slot_hits = [], []
+    recs = [] if record_states else None
     for t0, t1, chunk in workload.iter_chunks(chunk_slots):
         for k in range(t1 - t0):
             t = t0 + k
             sim.routine_update()
+            if record_states:
+                recs.append((np.argmax(sim.X, -1).astype(np.int32),
+                             sim.O.sum(-1) > 0,
+                             sim.target.astype(np.int32).copy()))
             if per_user:
                 m_u, home = sim.draw_slot_requests(t)
                 q, hits = sim.route(m_u, home)
@@ -474,6 +457,10 @@ def replay_workload(cfg: MECConfig, ocfg: OnlineConfig, algo: str,
             slot_hits.append(hits)
             sim.hist.append(np.asarray(chunk[k], np.float64))
             _policy_step(sim, algo, t, stream, ocfg)
+    if record_states:
+        sim.recorded_states = {
+            key: np.stack([r[i] for r in recs])
+            for i, key in enumerate(("lvl", "dl", "target"))}
     return np.asarray(slot_qoe), np.asarray(slot_hits), sim
 
 

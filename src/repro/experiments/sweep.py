@@ -219,7 +219,6 @@ DEFAULT_ONLINE_AXES = {
     "mem_capacity_mb": (300.0, 500.0),
 }
 DEFAULT_WORKLOADS = ("stationary", "flash_crowd")
-DEFAULT_TRACES = DEFAULT_WORKLOADS          # back-compat alias
 DEFAULT_POLICIES = ("cocar-ol", "lfu")
 
 
@@ -227,7 +226,7 @@ def run_online_sweep(base: MECConfig = None, axes: dict = None,
                      workloads=None, policies=DEFAULT_POLICIES,
                      ocfg=None, seed: int = 0, backend: str = "vmap",
                      devices: int = None, chunk_size: int = 0,
-                     diagnostics: bool = False, traces=None):
+                     diagnostics: bool = False):
     """Cross (config grid x workload family x policy), run everything in
     one vmapped scan dispatch (``backend="sharded"`` spreads it across a
     host-device mesh).  ``workloads`` names registry families
@@ -236,14 +235,11 @@ def run_online_sweep(base: MECConfig = None, axes: dict = None,
     aggregated-demand engine).  ``diagnostics=True`` taps the per-slot
     cache telemetry inside the scan (hit rate, downloads in flight,
     evictions, cache occupancy) and adds summary columns — decisions and
-    QoE stay bit-identical.  Returns a list of row dicts in grid order;
-    ``traces=`` is the deprecated alias for ``workloads=``."""
+    QoE stay bit-identical.  Returns a list of row dicts in grid order."""
     from repro.core.online import OnlineConfig
     from repro.traces.engine import run_online_grid
     from repro.traces.registry import make_workload
 
-    if traces is not None:
-        workloads = traces
     workloads = workloads or DEFAULT_WORKLOADS
     base = base or MECConfig(n_users=150)
     axes = axes or DEFAULT_ONLINE_AXES

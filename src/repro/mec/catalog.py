@@ -1,23 +1,66 @@
 """Dynamic-DNN catalog: submodel attributes (r_h, p_h, c_h, D_m).
 
-Two sources:
-  * the paper's own measurements (ViT, Tables II & III) — model type 0 is
-    ViT exactly; types 1..M-1 are deterministic size-jittered variants
-    (the paper uses 8 ViT/Swin-class types but publishes only ViT's table);
-  * derived catalogs from the real architecture zoo via
-    ``models.partition.catalog_entry`` (sizes/FLOPs from the actual configs),
-    used by the framework-scale serving examples.
+Three sources behind one registry (``make_catalog(source=...)``, the
+catalog counterpart of ``repro.traces.make_workload``):
+
+  * ``paper`` — the paper's own measurements (ViT, Tables II & III);
+    model type 0 is ViT exactly, types 1..M-1 are deterministic
+    size-jittered variants (the paper uses 8 ViT/Swin-class types but
+    publishes only ViT's table);
+  * ``zoo`` — derived from the real architecture zoo via
+    ``models.partition.catalog_entry`` (sizes/FLOPs from the actual
+    configs), used by the framework-scale serving examples;
+  * ``measured`` — like ``zoo`` but with the loading-latency matrix D_m
+    computed from the *actual parameter-tree bytes* each submodel
+    transition transfers (``models.partition.delta_bytes`` — the exact
+    byte math ``serving.loader.PodCache`` executes) over an explicit
+    load bandwidth, cross-checkable against Table III via
+    :func:`table3_mem_rate`.  This is the catalog the closed-loop
+    serving bench (``benchmarks/bench_serving.py``) optimizes and then
+    *executes*.
+
+Every source returns a :class:`Catalog` — a named, frozen view of the
+four arrays.  Positional ``(sizes, prec, flops, loadD)`` unpacking is
+gone: call sites read fields by name.
 """
 from __future__ import annotations
+
+from dataclasses import dataclass, field
 
 import numpy as np
 
 from repro.configs.vit_edge import VIT_LOAD_S, VIT_SUBMODELS
 
 
-def paper_catalog(n_models: int = 8, seed: int = 7):
-    """Returns (sizes (M,H+1) MB, prec (M,H+1), flops (M,H+1) GFLOP/request,
-    loadD (M,H+1,H+1) seconds)."""
+@dataclass(frozen=True)
+class Catalog:
+    """The model catalog the JDCR instances and the serving data plane
+    share.  Index 0 of the submodel axis is "not cached" (zero size/
+    precision); index j >= 1 is submodel h_j (serving exit ``j - 1``)."""
+    sizes: np.ndarray            # (M, H+1) MB
+    prec: np.ndarray             # (M, H+1) delivered precision
+    flops: np.ndarray            # (M, H+1) GFLOP per request
+    loadD: np.ndarray            # (M, H+1, H+1) switch seconds [from, to]
+    source: str = "paper"
+    names: tuple = ()            # model names ("" entries for paper types)
+    bandwidth_MBps: float = 0.0  # load bandwidth behind loadD (0 = assumed)
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def n_models(self) -> int:
+        return self.sizes.shape[0]
+
+    @property
+    def H(self) -> int:
+        return self.sizes.shape[1] - 1
+
+    def load_seconds(self, m: int, lvl_from: int, lvl_to: int) -> float:
+        """D_m for one transition, catalog-level indexed (0 = empty)."""
+        return float(self.loadD[m, lvl_from, lvl_to])
+
+
+def paper_catalog(n_models: int = 8, seed: int = 7) -> Catalog:
+    """The paper's measured ViT tables, jittered into ``n_models`` types."""
     H = len(VIT_SUBMODELS)
     rng = np.random.default_rng(seed)
     # 0.5..1.4: the catalog spans ~87..480 MB submodels, so the smallest
@@ -40,38 +83,142 @@ def paper_catalog(n_models: int = 8, seed: int = 7):
         loadD[m, :, 1:] = base_load * f
         # switching down / evicting is (nearly) free (paper Sec. VI)
         loadD[m, 1:, 0] = 0.0
-    return sizes, prec, flops, loadD
+    return Catalog(sizes=sizes, prec=prec, flops=flops, loadD=loadD,
+                   source="paper", names=("vit",) + ("",) * (n_models - 1))
 
 
-def zoo_catalog(arch_ids, ctx: int = 2048, mem_rate_mbps: float = 2024.0):
+def zoo_catalog(arch_ids, ctx: int = 2048,
+                mem_rate_mbps: float = 2024.0) -> Catalog:
     """Catalog derived from the real architecture zoo (framework scale).
 
     mem_rate is the secondary-storage->memory load rate implied by the
     paper's Table III (~253 MB/s)."""
     from repro import configs
+
+    cfgs = {a: configs.get_config(a) for a in arch_ids}
+    return _derived_catalog(cfgs, ctx=ctx, source="zoo",
+                            bandwidth_MBps=mem_rate_mbps / 8.0,
+                            measured_loadD=False)
+
+
+def measured_catalog(cfgs: dict, tokens: int = 64,
+                     bandwidth_MBps: float = None) -> Catalog:
+    """Catalog whose loading latencies are *measured*, not assumed.
+
+    ``cfgs`` maps model names to real ``ModelConfig``s.  Sizes and the
+    D_m matrix come from the actual parameter-tree bytes each submodel
+    transition moves (``partition.submodel_bytes`` / ``delta_bytes`` via
+    ``jax.eval_shape`` — no weights materialize), divided by
+    ``bandwidth_MBps`` (default: the storage->memory rate the paper's
+    Table III implies, :func:`table3_mem_rate`).  FLOPs are per
+    ``tokens``-token request, so a request's inference time agrees
+    between the LP's latency model and the queue simulator's
+    ``service_time`` when both use the same compute figure.
+    """
+    if bandwidth_MBps is None:
+        bandwidth_MBps = table3_mem_rate()["median"]
+    return _derived_catalog(dict(cfgs), ctx=tokens, source="measured",
+                            bandwidth_MBps=float(bandwidth_MBps),
+                            measured_loadD=True, tokens=tokens)
+
+
+def _derived_catalog(cfgs: dict, ctx: int, source: str,
+                     bandwidth_MBps: float, measured_loadD: bool,
+                     tokens: int = None) -> Catalog:
     from repro.models import partition
 
-    cfgs = [configs.get_config(a) for a in arch_ids]
-    H = max(c.n_exits for c in cfgs)
+    names = tuple(cfgs)
+    H = max(c.n_exits for c in cfgs.values())
     M = len(cfgs)
     sizes = np.zeros((M, H + 1))
     prec = np.zeros((M, H + 1))
     flops = np.zeros((M, H + 1))
     loadD = np.zeros((M, H + 1, H + 1))
-    rate = mem_rate_mbps / 8.0 * 1e6                        # bytes/s
-    for m, cfg in enumerate(cfgs):
+    rate = bandwidth_MBps * 1e6                             # bytes/s
+    for m, cfg in enumerate(cfgs.values()):
         entries = partition.catalog_entry(cfg, ctx)
         # depth-quality curve: saturating toward a per-arch ceiling
         for j, e in enumerate(entries):
             frac = cfg.exit_layers[j] / cfg.n_layers
             sizes[m, j + 1] = e["r_h"] / 1e6                # MB
             prec[m, j + 1] = 0.99 * (1 - 0.45 * (1 - frac) ** 1.5)
-            flops[m, j + 1] = e["c_h"] / 1e9                # GFLOP/token
+            if tokens is None:
+                flops[m, j + 1] = e["c_h"] / 1e9            # GFLOP/token
+            else:
+                flops[m, j + 1] = tokens * e["c_h"] / 1e9   # GFLOP/request
         for prev in range(H + 1):
             for tgt in range(1, H + 1):
-                if tgt >= prev:
+                if measured_loadD:
+                    # the serving loader's exact byte math: an upgrade
+                    # transfers only the Delta segments + new exit head,
+                    # a shrink is an instant slice (PodCache semantics)
+                    if tgt > prev:
+                        nbytes = partition.delta_bytes(cfg, prev - 1,
+                                                       tgt - 1)
+                        loadD[m, prev, tgt] = nbytes / rate
+                    else:
+                        loadD[m, prev, tgt] = 0.0
+                elif tgt >= prev:
                     delta = sizes[m, tgt] - (sizes[m, prev] if prev else 0.0)
-                    loadD[m, prev, tgt] = delta * 1e6 / rate * 8.0 + 0.01
+                    loadD[m, prev, tgt] = delta * 1e6 / rate + 0.01
                 else:
                     loadD[m, prev, tgt] = 0.042             # prune overhead
-    return sizes, prec, flops, loadD
+    return Catalog(sizes=sizes, prec=prec, flops=flops, loadD=loadD,
+                   source=source, names=names,
+                   bandwidth_MBps=float(bandwidth_MBps),
+                   meta={"ctx": ctx, "measured_loadD": measured_loadD})
+
+
+def table3_mem_rate() -> dict:
+    """The storage->memory load rates the paper's Table III implies.
+
+    Each upgrade (from submodel i to j) in ``VIT_LOAD_S`` moves
+    ``size[j] - size[i]`` MB in the listed seconds; the implied MB/s
+    band is the cross-check a measured catalog's bandwidth must land in
+    (Table III's rates are not constant — per-transition overheads make
+    small transfers look slower — so this is a band, not one number).
+    """
+    sz = np.array([0.0] + [s["memory_mb"] for s in VIT_SUBMODELS])
+    load = np.asarray(VIT_LOAD_S)                           # (H+1, H)
+    rates = []
+    for i in range(load.shape[0]):
+        for j in range(1, load.shape[1] + 1):
+            if j > i and load[i, j - 1] > 0:
+                rates.append((sz[j] - sz[i]) / load[i, j - 1])
+    rates = np.asarray(rates)
+    return {"min": float(rates.min()), "max": float(rates.max()),
+            "median": float(np.median(rates)),
+            "rates_MBps": rates.tolist()}
+
+
+def crosscheck_table3(catalog: Catalog, slack: float = 0.10) -> dict:
+    """Does a measured catalog's load bandwidth sit inside the rate band
+    Table III implies (within ``slack`` relative tolerance at the band
+    edges)?  Returns the verdict plus both sides of the comparison —
+    the gated provenance record in ``BENCH_serving.json``."""
+    band = table3_mem_rate()
+    bw = float(catalog.bandwidth_MBps)
+    ok = (band["min"] * (1 - slack)) <= bw <= (band["max"] * (1 + slack))
+    return {"ok": bool(ok), "bandwidth_MBps": bw,
+            "table3_min_MBps": band["min"], "table3_max_MBps": band["max"],
+            "table3_median_MBps": band["median"]}
+
+
+#: registry: catalog source name -> constructor
+CATALOG_SOURCES = {
+    "paper": paper_catalog,
+    "zoo": zoo_catalog,
+    "measured": measured_catalog,
+}
+
+
+def make_catalog(source: str = "paper", **kw) -> Catalog:
+    """Build a named catalog — ``make_catalog("paper", n_models=8)``,
+    ``make_catalog("zoo", arch_ids=[...])``, or
+    ``make_catalog("measured", cfgs={...}, bandwidth_MBps=...)``."""
+    try:
+        fn = CATALOG_SOURCES[source]
+    except KeyError:
+        raise ValueError(f"unknown catalog source {source!r}; one of "
+                         f"{tuple(CATALOG_SOURCES)}") from None
+    return fn(**kw)

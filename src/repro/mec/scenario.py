@@ -15,7 +15,7 @@ from dataclasses import dataclass, field, replace
 import numpy as np
 
 from repro.core.jdcr import JDCRInstance
-from repro.mec.catalog import paper_catalog
+from repro.mec.catalog import Catalog, make_catalog
 
 
 @dataclass
@@ -76,13 +76,19 @@ def zipf_popularity(n, a, rng):
 class Scenario:
     """Holds the static topology and generates per-window JDCR instances."""
 
-    def __init__(self, cfg: MECConfig):
+    def __init__(self, cfg: MECConfig, catalog: Catalog = None):
         self.cfg = cfg
         rng = np.random.default_rng(cfg.seed)
         self.rng = rng
         N, M = cfg.n_bs, cfg.n_models
-        self.sizes, self.prec, self.flops_req, self.loadD = \
-            paper_catalog(M, seed=cfg.seed + 7)
+        cat = catalog or make_catalog("paper", n_models=M,
+                                      seed=cfg.seed + 7)
+        if cat.n_models != M:
+            raise ValueError(f"catalog has {cat.n_models} models, "
+                             f"config wants n_models={M}")
+        self.catalog = cat
+        self.sizes, self.prec = cat.sizes, cat.prec
+        self.flops_req, self.loadD = cat.flops, cat.loadD
         # flops per data unit (paper c_h): Table II is GFLOP per request of
         # size d_u, so c_h = GFLOP / d_u per MB
         self.flops = self.flops_req / cfg.data_mb

@@ -519,8 +519,8 @@ def _run_online(spec: GridSpec, mesh, stats):
         fn = _compile("online", mesh, 8,
                       _online_inner(bool(spec.diagnostics)),
                       bool(spec.diagnostics))
-        stF, qoe, hits, diag = _run_chunks(spec, mesh, fn, args, len(idx),
-                                           stats, bucket_key=key[0])
+        stF, qoe, hits, diag, _ = _run_chunks(spec, mesh, fn, args, len(idx),
+                                              stats, bucket_key=key[0])
         for j, i in enumerate(idx):
             tot = max(pls[j]["total"], 1.0)
             results[int(i)] = {

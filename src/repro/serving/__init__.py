@@ -1,2 +1,9 @@
 from repro.serving.engine import EdgeCluster, Request  # noqa: F401
 from repro.serving.loader import PodCache, WeightStore  # noqa: F401
+from repro.serving.plan import (ServingPlan,  # noqa: F401
+                                check_mid_download_never_serves,
+                                execute_plan, plan_from_offline,
+                                plan_from_online_state,
+                                plans_from_online_states)
+from repro.serving.simulator import (QueueSim, SimRequest,  # noqa: F401
+                                     poisson_arrivals, transfer_time)

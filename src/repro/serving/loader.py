@@ -18,11 +18,17 @@ from repro.models import partition
 
 
 class WeightStore:
-    def __init__(self, cfgs: dict, seed: int = 0):
+    def __init__(self, cfgs: dict, seed: int = 0, lazy: bool = False):
+        """``lazy=True`` skips materializing the parameter trees — byte
+        accounting (``PodCache.request_load`` / ``used_bytes``) works
+        off ``jax.eval_shape``, so load-time simulation over multi-GB
+        catalogs never allocates weights; only ``_materialize`` (i.e.
+        actually serving) needs the real trees."""
         self.cfgs = dict(cfgs)
         self.params = {}
-        for i, (name, cfg) in enumerate(self.cfgs.items()):
-            self.params[name] = M.init(cfg, jax.random.key(seed + i))
+        if not lazy:
+            for i, (name, cfg) in enumerate(self.cfgs.items()):
+                self.params[name] = M.init(cfg, jax.random.key(seed + i))
 
     def set_params(self, name, params):
         self.params[name] = params

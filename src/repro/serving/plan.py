@@ -1,0 +1,176 @@
+"""ServingPlan — the decision bridge from the paper's control plane to
+the serving data plane.
+
+The offline pipeline (``repro.core.cocar``) emits caching one-hots
+``x (N, M, H+1)`` and the online engine (``repro.core.online`` /
+``repro.traces.engine``) emits per-slot cache states ``lvl (N, M)`` with
+in-flight download state ``(O, target)``.  The data plane
+(``serving.simulator.QueueSim`` / ``serving.engine.EdgeCluster``) wants
+per-pod residency maps ``{pod: {model: exit_idx}}`` plus, when loading
+delay is simulated, the time each (pod, model) becomes serveable.
+
+This module is that conversion — no hand-constructed residency profiles
+anywhere:
+
+  * :func:`plan_from_offline` — one window's decision array to a
+    :class:`ServingPlan`, with per-(pod, model) availability times from
+    the catalog's D_m matrix (measured bytes / bandwidth when the
+    catalog source is ``measured``) given the previous cache state;
+  * :func:`plans_from_online_states` — the per-slot residency schedule
+    of an online run recorded with ``run_online(..,
+    record_states=True)``.  A submodel mid-download never serves: the
+    residency is the *current* level ``lvl``, and the in-flight target
+    is structurally excluded (checked by
+    :func:`check_mid_download_never_serves`);
+  * :func:`execute_plan` — run a plan through :class:`QueueSim` with or
+    without the loading delay, with the catalog's own precision ladder
+    so delivered precision means the same thing on both planes.
+
+Catalog-level indexing note: level ``j`` (0 = not cached) corresponds to
+serving exit ``j - 1``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.serving.simulator import QueueSim
+
+
+@dataclass
+class ServingPlan:
+    """A control-plane decision, expressed in data-plane terms."""
+    residency: dict              # {pod: {model_name: exit_idx (0-based)}}
+    available_at: dict = field(default_factory=dict)
+    #: {(pod, model_name): sim-time s when the cached submodel is loaded}
+    source: str = "offline"      # "offline:<policy>" | "online:<algo>@t"
+    lvl: np.ndarray = None       # (N, M) catalog levels (0 = not cached)
+    routing: np.ndarray = None   # optional control-plane A (N, U, H)
+
+    @property
+    def n_pods(self) -> int:
+        return len(self.residency)
+
+    def max_load_s(self) -> float:
+        return max(self.available_at.values(), default=0.0)
+
+
+def cache_levels(x) -> np.ndarray:
+    """(N, M, H+1) caching one-hot -> (N, M) catalog levels."""
+    x = np.asarray(x)
+    if x.ndim != 3:
+        raise ValueError(f"expected (N, M, H+1) one-hot, got {x.shape}")
+    return np.argmax(x, axis=-1).astype(np.int32)
+
+
+def plan_from_offline(x, names, catalog=None, x_prev=None,
+                      policy: str = "offline", routing=None) -> ServingPlan:
+    """One offline decision array -> a serving plan.
+
+    ``x`` is a window's integral caching one-hot ``(N, M, H+1)`` (e.g.
+    ``policy_grid_device`` output sliced to one (window, seed));
+    ``names[m]`` labels model type m with the data-plane model name.
+    With a ``catalog``, each upgraded (pod, model) gets an availability
+    time ``loadD[m, prev, tgt]`` — the transition's loading latency from
+    the previous cache state ``x_prev`` (default: empty cache, i.e. a
+    cold start where everything resident must first be loaded).
+    """
+    lvl = cache_levels(x)
+    N, M = lvl.shape
+    if len(names) != M:
+        raise ValueError(f"{M} model types but {len(names)} names")
+    prev = (np.zeros((N, M), np.int32) if x_prev is None
+            else cache_levels(x_prev))
+    residency, available = {}, {}
+    for n in range(N):
+        residency[n] = {}
+        for m in range(M):
+            j = int(lvl[n, m])
+            if j < 1:
+                continue
+            residency[n][names[m]] = j - 1
+            if catalog is not None and j > prev[n, m]:
+                available[(n, names[m])] = catalog.load_seconds(
+                    m, int(prev[n, m]), j)
+    return ServingPlan(residency=residency, available_at=available,
+                       source=f"offline:{policy}", lvl=lvl, routing=routing)
+
+
+def plan_from_online_state(lvl, dl, target, names,
+                           source: str = "online") -> ServingPlan:
+    """One recorded online slot state -> the slot's serving plan.
+
+    ``lvl`` is the slot's cached level, ``dl`` the per-(BS, model)
+    download-in-flight flag, ``target`` the in-flight download target.
+    Residency is built from ``lvl`` alone — a submodel still downloading
+    (``dl`` true, ``target > lvl``) is NOT resident at its target; the
+    pod keeps serving the current level until the download lands, which
+    is exactly the paper's Eq. 37 semantics.
+    """
+    lvl = np.asarray(lvl)
+    N, M = lvl.shape
+    residency = {}
+    for n in range(N):
+        residency[n] = {names[m]: int(lvl[n, m]) - 1
+                        for m in range(M) if int(lvl[n, m]) >= 1}
+    return ServingPlan(residency=residency, source=source, lvl=lvl)
+
+
+def plans_from_online_states(states: dict, names,
+                             algo: str = "cocar-ol") -> list:
+    """The whole per-slot residency schedule of one online run:
+    ``states`` is the ``run_online(.., record_states=True)`` export
+    (``{"lvl": (T, N, M), "dl": (T, N, M), "target": (T, N, M)}``)."""
+    T = states["lvl"].shape[0]
+    return [plan_from_online_state(states["lvl"][t], states["dl"][t],
+                                   states["target"][t], names,
+                                   source=f"online:{algo}@{t}")
+            for t in range(T)]
+
+
+def check_mid_download_never_serves(states: dict) -> dict:
+    """The online bridge's safety invariant: wherever a download is in
+    flight, the *serving* level is strictly below the download target —
+    i.e. no slot's residency ever exposes a submodel whose bytes have
+    not fully arrived.  Returns the verdict plus coverage (how many
+    slot-(BS, model) pairs were actually mid-download; a vacuously true
+    check is reported as such)."""
+    lvl = np.asarray(states["lvl"])
+    dl = np.asarray(states["dl"], bool)
+    target = np.asarray(states["target"])
+    in_flight = int(dl.sum())
+    ok = bool(np.all(lvl[dl] < target[dl])) if in_flight else True
+    return {"ok": ok, "in_flight_pairs": in_flight,
+            "vacuous": in_flight == 0}
+
+
+def catalog_precisions(catalog, names) -> dict:
+    """{(model, exit_idx): precision} from the catalog ladder, so the
+    data plane reports exactly the precision the control plane
+    optimized."""
+    return {(name, j - 1): float(catalog.prec[m, j])
+            for m, name in enumerate(names)
+            for j in range(1, catalog.sizes.shape[1])}
+
+
+def execute_plan(plan: ServingPlan, cfgs: dict, compute_flops: float,
+                 arrivals: list, catalog=None, names=None,
+                 with_load_delay: bool = True, admit_late: bool = False,
+                 seed: int = 0) -> dict:
+    """Run one plan through the queue simulator.
+
+    ``with_load_delay=True`` honours the plan's availability times (a
+    pod cannot serve a submodel before its bytes have loaded);
+    ``False`` is the idealised instant-loading counterfactual the
+    ranking-survival comparison is made against.  Returns the
+    ``QueueSim.metrics()`` dict.
+    """
+    precisions = (catalog_precisions(catalog, names)
+                  if catalog is not None and names is not None else None)
+    sim = QueueSim(cfgs, plan.residency, compute_flops,
+                   precisions=precisions, seed=seed,
+                   available_at=plan.available_at if with_load_delay
+                   else None,
+                   admit_late=admit_late)
+    return sim.run(arrivals)

@@ -45,10 +45,22 @@ class SimRequest:
 
 
 class QueueSim:
-    """Single-server-per-pod FCFS queues with precision-aware routing."""
+    """Single-server-per-pod FCFS queues with precision-aware routing.
+
+    ``residency`` usually comes from a control-plane decision via
+    ``repro.serving.plan`` — ``{pod: {model: exit_idx}}``.  With
+    ``available_at`` (``{(pod, model): t}``, e.g. a ServingPlan's
+    measured loading times) a pod cannot start serving a submodel before
+    its bytes have loaded; with ``fail_at`` (``{pod: t}``) a pod stops
+    accepting requests from time t on — requests already in its queue
+    complete, new arrivals re-route or drop.  ``admit_late`` serves
+    requests that cannot meet their deadline anyway (counted as
+    deadline misses) instead of dropping them at admission.
+    """
 
     def __init__(self, cfgs: dict, residency: dict, compute_flops: float,
-                 precisions=None, seed: int = 0):
+                 precisions=None, seed: int = 0, available_at: dict = None,
+                 fail_at: dict = None, admit_late: bool = False):
         """residency: {pod: {model: exit_idx}}."""
         self.cfgs = cfgs
         self.residency = residency
@@ -58,6 +70,9 @@ class QueueSim:
         self.done: list = []
         self.dropped = 0
         self._prec = precisions or {}
+        self.available_at = available_at or {}
+        self.fail_at = fail_at or {}
+        self.admit_late = admit_late
 
     def precision_of(self, model, j):
         if (model, j) in self._prec:
@@ -72,19 +87,29 @@ class QueueSim:
         return tokens * c / self.compute
 
     def route(self, req: SimRequest):
-        """Max precision among pods that can still meet the deadline."""
-        best = None
+        """Max precision among pods that can still meet the deadline.
+        With ``admit_late``, falls back to the earliest-finishing pod
+        when no pod can (the request completes late and is accounted a
+        deadline miss)."""
+        best, late = None, None
         for p, models in self.residency.items():
+            if req.arrival >= self.fail_at.get(p, np.inf):
+                continue
             j = models.get(req.model, -1)
             if j < 0:
                 continue
-            eta = max(self.busy_until[p], req.arrival)
+            eta = max(self.busy_until[p], req.arrival,
+                      self.available_at.get((p, req.model), 0.0))
             fin = eta + self.service_time(req.model, j, req.tokens)
-            if fin > req.deadline:
-                continue
             score = self.precision_of(req.model, j)
+            if fin > req.deadline:
+                if late is None or fin < late[3]:
+                    late = (score, p, j, fin)
+                continue
             if best is None or score > best[0]:
                 best = (score, p, j, fin)
+        if best is None and self.admit_late:
+            return late
         return best
 
     def run(self, arrivals: list):
@@ -96,7 +121,8 @@ class QueueSim:
                 continue
             score, p, j, fin = choice
             req.pod = p
-            req.start = max(self.busy_until[p], req.arrival)
+            req.start = max(self.busy_until[p], req.arrival,
+                            self.available_at.get((p, req.model), 0.0))
             req.finish = fin
             req.precision = score
             self.busy_until[p] = fin
@@ -110,6 +136,10 @@ class QueueSim:
         return {
             "served": len(self.done),
             "dropped": self.dropped,
+            # every request that did not complete by its deadline —
+            # dropped at admission or served late (admit_late)
+            "deadline_misses": (self.dropped
+                                + sum(not r.met_slo for r in self.done)),
             "slo_attainment": (sum(r.met_slo for r in self.done) / total
                                if total else 0.0),
             "p50_latency": float(np.percentile(lats, 50)),
@@ -118,6 +148,17 @@ class QueueSim:
             "avg_precision": (sum(r.precision for r in self.done) / total
                               if total else 0.0),
         }
+
+
+def transfer_time(cfg, from_exit: int, to_exit: int,
+                  bandwidth_Bps: float) -> float:
+    """Seconds to switch a pod's cached submodel — the same byte math
+    ``loader.PodCache.request_load`` executes: an upgrade moves only the
+    Δ parameter segments + the new exit head, a shrink is an instant
+    slice.  ``from_exit=-1`` is a cold load."""
+    if to_exit <= from_exit:
+        return 0.0
+    return partition.delta_bytes(cfg, from_exit, to_exit) / bandwidth_Bps
 
 
 def poisson_arrivals(rate_per_s: float, duration_s: float, models: list,

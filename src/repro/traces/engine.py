@@ -379,19 +379,32 @@ def _random_step(p, st, n, u_m, perm, u_shr):
 # the scan
 # ---------------------------------------------------------------------------
 
-def _slot_step(p, policy, st, xs, diagnostics: bool = False):
+def _slot_step(p, policy, st, xs, diagnostics: bool = False,
+               record_states: bool = False):
     """One slot: downloads -> routing/QoE -> history push -> policy.
 
     With ``diagnostics`` (static) the emission grows a per-slot telemetry
     dict — cache-hit rate, downloads in flight, evictions this slot,
     cached MB — computed purely from values the step already produces, so
     the state trajectory (and every decision) is bit-identical either
-    way; off, the dict is empty and compiles out entirely."""
+    way; off, the dict is empty and compiles out entirely.
+
+    With ``record_states`` (static) the emission additionally carries
+    the slot's *serving* cache state — ``(lvl, dl, target)`` right after
+    the download update, i.e. exactly the state Eq. 41 routes against
+    this slot.  This is the per-slot export the serving bridge
+    (``repro.serving.plan``) turns into residency schedules; a submodel
+    mid-download (``dl`` true) is still at its pre-download ``lvl``, so
+    it can never be exposed as resident at its target.  Decision-inert,
+    like diagnostics: off, nothing extra is compiled or carried."""
     import jax
     import jax.numpy as jnp
 
     counts, ns, u_model, perms, u_shrink = xs
     st = _routine_update(p, st)
+    rec = ()
+    if record_states:
+        rec = (st.lvl, st.O.sum(-1) > 0, st.target)
     best = _qoe_best(p, st.lvl)
     qoe = (counts * best).sum()
     hits = (counts * (best > 0)).sum()
@@ -422,34 +435,39 @@ def _slot_step(p, policy, st, xs, diagnostics: bool = False):
             "evictions": (st.lvl < lvl_before).sum(),
             "cache_mb": p.sizes[ms[None, :], st.lvl].sum(),
         }
-    return st, (qoe, hits, diag)
+    return st, (qoe, hits, diag, rec)
 
 
 def _scan_run(p, st0, counts, ns, u_model, perms, u_shrink, policy,
-              diagnostics: bool = False):
-    """Whole-trace scan.  Always returns ``(stF, qoe, hits, diag)``;
+              diagnostics: bool = False, record_states: bool = False):
+    """Whole-trace scan.  Always returns ``(stF, qoe, hits, diag, rec)``;
     ``diag`` is a dict of per-slot curves when ``diagnostics`` (static)
-    is on, else the empty dict (nothing extra compiled or carried)."""
+    is on and ``rec`` the per-slot ``(lvl, dl, target)`` trajectory when
+    ``record_states`` is on — otherwise both are empty (nothing extra
+    compiled or carried)."""
     import jax
 
     def step(st, xs):
-        return _slot_step(p, policy, st, xs, diagnostics=diagnostics)
+        return _slot_step(p, policy, st, xs, diagnostics=diagnostics,
+                          record_states=record_states)
 
-    stF, (qoe, hits, diag) = jax.lax.scan(
+    stF, (qoe, hits, diag, rec) = jax.lax.scan(
         step, st0, (counts, ns, u_model, perms, u_shrink))
-    return stF, qoe, hits, diag
+    return stF, qoe, hits, diag, rec
 
 
 @functools.cache
-def _compiled(diagnostics: bool = False):
+def _compiled(diagnostics: bool = False, record_states: bool = False):
     """The single-scenario scan (``run_scan``).  Grid runs go through the
     ``repro.scale`` executor, which jits its own vmapped ``_scan_run``."""
     import jax
 
     from repro.obs.tracing import register_jit
 
-    fn = functools.partial(_scan_run, diagnostics=diagnostics)
-    return register_jit(f"online:scan:diag={int(bool(diagnostics))}",
+    fn = functools.partial(_scan_run, diagnostics=diagnostics,
+                           record_states=record_states)
+    return register_jit(f"online:scan:diag={int(bool(diagnostics))}"
+                        f":rec={int(bool(record_states))}",
                         jax.jit(fn))
 
 
@@ -463,16 +481,19 @@ def _policy_id(algo: str) -> int:
 
 def run_scan(params: OnlineParams, counts, stream: DecisionStream,
              algo: str = "cocar-ol", dT_past: int = 10,
-             diagnostics: bool = False):
+             diagnostics: bool = False, record_states: bool = False):
     """One scenario through the compiled scan.  Returns the summary dict of
     ``run_online`` plus per-slot arrays and the final state — and, with
     ``diagnostics``, the engine's per-slot telemetry curves (decision-
-    inert: same compiled step math, extra emissions only)."""
+    inert: same compiled step math, extra emissions only), and, with
+    ``record_states``, the per-slot serving cache states under
+    ``"states"`` (the serving bridge's input)."""
     from jax.experimental import enable_x64
 
     st0 = init_state(params, dT_past)
     with enable_x64():
-        stF, qoe, hits, diag = _compiled(bool(diagnostics))(
+        stF, qoe, hits, diag, rec = _compiled(
+            bool(diagnostics), bool(record_states))(
             params, st0, np.asarray(counts, np.float64),
             stream.adjust_ns, stream.u_model, stream.perms, stream.u_shrink,
             _policy_id(algo))
@@ -489,12 +510,17 @@ def run_scan(params: OnlineParams, counts, stream: DecisionStream,
     }
     if diagnostics:
         out["diagnostics"] = {k: np.asarray(v) for k, v in diag.items()}
+    if record_states:
+        out["states"] = {"lvl": np.asarray(rec[0]),
+                         "dl": np.asarray(rec[1]),
+                         "target": np.asarray(rec[2])}
     return out
 
 
 def run_workload(params: OnlineParams, workload, stream: DecisionStream,
                  algo: str = "cocar-ol", dT_past: int = 10,
-                 diagnostics: bool = False, chunk_slots: int = 0):
+                 diagnostics: bool = False, chunk_slots: int = 0,
+                 record_states: bool = False):
     """Stream a :class:`~repro.traces.workloads.Workload` through the
     compiled scan in bounded chunks.
 
@@ -508,14 +534,14 @@ def run_workload(params: OnlineParams, workload, stream: DecisionStream,
     from jax.experimental import enable_x64
 
     st = init_state(params, dT_past)
-    fn = _compiled(bool(diagnostics))
+    fn = _compiled(bool(diagnostics), bool(record_states))
     pid = _policy_id(algo)
-    qoes, hitss, diags, total = [], [], [], 0.0
+    qoes, hitss, diags, recs, total = [], [], [], [], 0.0
     with enable_x64():
         for t0, t1, counts in workload.iter_chunks(chunk_slots):
             counts = np.asarray(counts, np.float64)
             total += float(counts.sum())
-            st, qoe, hits, diag = fn(
+            st, qoe, hits, diag, rec = fn(
                 params, st, counts, stream.adjust_ns[t0:t1],
                 stream.u_model[t0:t1], stream.perms[t0:t1],
                 stream.u_shrink[t0:t1], pid)
@@ -523,6 +549,8 @@ def run_workload(params: OnlineParams, workload, stream: DecisionStream,
             hitss.append(np.asarray(hits))
             if diagnostics:
                 diags.append({k: np.asarray(v) for k, v in diag.items()})
+            if record_states:
+                recs.append(tuple(np.asarray(r) for r in rec))
     qoe, hits = np.concatenate(qoes), np.concatenate(hitss)
     out = {
         "avg_qoe": float(qoe.sum()) / max(total, 1.0),
@@ -534,38 +562,11 @@ def run_workload(params: OnlineParams, workload, stream: DecisionStream,
     if diagnostics:
         out["diagnostics"] = {
             k: np.concatenate([d[k] for d in diags]) for k in diags[0]}
+    if record_states:
+        out["states"] = {
+            key: np.concatenate([r[i] for r in recs])
+            for i, key in enumerate(("lvl", "dl", "target"))}
     return out
-
-
-def run_online_scan(cfg, ocfg, algo: str = "cocar-ol", seed: int = 0,
-                    trace=None, stream: DecisionStream = None,
-                    diagnostics: bool = False):
-    """Deprecated shim over the unified API (kept for one release).
-
-    Use ``repro.core.online.run_online(workload, policy, cfg=..., ocfg=...,
-    engine="scan")`` — this wrapper derives the same default trace/stream
-    it always did, wraps the trace as a ``DenseWorkload``, and routes
-    through ``run_workload``, so results are identical to the old path.
-    """
-    import warnings
-    from dataclasses import replace
-
-    from repro.traces.registry import default_trace
-    from repro.traces.workloads import DenseWorkload
-
-    warnings.warn(
-        "run_online_scan(cfg, ocfg, ...) is deprecated; build a Workload "
-        "(repro.traces.make_workload / as_workload) and call "
-        "repro.core.online.run_online(workload, policy, cfg=cfg, "
-        "ocfg=ocfg, engine='scan')", DeprecationWarning, stacklevel=2)
-    cfg = replace(cfg, seed=seed)
-    trace = trace or default_trace(cfg, ocfg)
-    check_trace(trace, cfg, ocfg)
-    stream = stream or default_stream(cfg, ocfg, seed)
-    return run_workload(make_params(cfg, ocfg),
-                        DenseWorkload(trace, cfg.n_bs, cfg.n_models),
-                        stream, algo, dT_past=ocfg.dT_past,
-                        diagnostics=diagnostics)
 
 
 def grid_payloads(jobs, ocfg):

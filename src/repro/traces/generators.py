@@ -308,8 +308,8 @@ class DecisionStream:
 def default_stream(cfg, ocfg, seed: int) -> DecisionStream:
     """The run's policy randomness for (cfg, ocfg): keyed off ``seed + 99``
     so it is independent of the trace key (``cfg.seed``).  The single
-    derivation shared by ``run_online``, ``run_online_scan`` and
-    ``run_online_grid`` — it is load-bearing for NumPy==scan replay."""
+    derivation shared by ``run_online`` and ``run_online_grid`` — it is
+    load-bearing for NumPy==scan replay."""
     return draw_decision_stream(ocfg.n_slots, ocfg.rounds, cfg.n_bs,
                                 cfg.n_models, seed + 99)
 

@@ -210,14 +210,16 @@ def test_policy_grid_diag_inert():
 
 
 def test_online_scan_diag_inert():
-    from repro.core.online import OnlineConfig
+    from repro.core.online import OnlineConfig, run_online
     from repro.mec.scenario import MECConfig
-    from repro.traces.engine import run_online_scan
+    from repro.traces.registry import default_workload
 
     cfg = MECConfig(n_bs=3, n_users=30, n_models=4, seed=0)
     ocfg = OnlineConfig(n_slots=12, rounds=2)
-    off = run_online_scan(cfg, ocfg, algo="cocar-ol")
-    on = run_online_scan(cfg, ocfg, algo="cocar-ol", diagnostics=True)
+    wl = default_workload(cfg, ocfg)
+    off = run_online(wl, "cocar-ol", cfg=cfg, ocfg=ocfg, engine="scan")
+    on = run_online(wl, "cocar-ol", cfg=cfg, ocfg=ocfg, engine="scan",
+                    diagnostics=True)
     np.testing.assert_array_equal(off["slot_qoe"], on["slot_qoe"])
     np.testing.assert_array_equal(off["final_state"].lvl,
                                   on["final_state"].lvl)

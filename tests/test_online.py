@@ -66,17 +66,24 @@ def test_qoe_decays_with_latency():
 
 
 def test_partition_beats_no_partition():
+    from repro.traces.registry import default_workload
     cfg = MECConfig(n_users=150)
-    r_p = run_online(cfg, OnlineConfig(n_slots=50), "cocar-ol")
-    r_np = run_online(cfg, OnlineConfig(n_slots=50, partition=False),
-                      "cocar-ol")
+    ocfg_p = OnlineConfig(n_slots=50)
+    ocfg_np = OnlineConfig(n_slots=50, partition=False)
+    r_p = run_online(default_workload(cfg, ocfg_p), "cocar-ol",
+                     cfg=cfg, ocfg=ocfg_p, engine="numpy")
+    r_np = run_online(default_workload(cfg, ocfg_np), "cocar-ol",
+                      cfg=cfg, ocfg=ocfg_np, engine="numpy")
     assert r_p["avg_qoe"] > r_np["avg_qoe"]
 
 
 def test_cocarol_beats_lfu_and_random():
+    from repro.traces.registry import default_workload
     cfg = MECConfig(n_users=150)
     ocfg = OnlineConfig(n_slots=50)
-    r = {a: run_online(cfg, ocfg, a) for a in ("cocar-ol", "lfu", "random")}
+    wl = default_workload(cfg, ocfg)
+    r = {a: run_online(wl, a, cfg=cfg, ocfg=ocfg, engine="numpy")
+         for a in ("cocar-ol", "lfu", "random")}
     assert r["cocar-ol"]["avg_qoe"] > r["lfu"]["avg_qoe"]
     assert r["cocar-ol"]["avg_qoe"] > r["random"]["avg_qoe"]
 
@@ -92,9 +99,13 @@ def test_all_policies_replay_identical_stream():
         np.testing.assert_array_equal(sim.trace.model, ref.model)
         np.testing.assert_array_equal(sim.trace.home, ref.home)
     # and run_online itself is a pure function of (cfg, ocfg, algo, seed)
-    r1 = run_online(cfg, ocfg, "lfu", seed=3)
-    r2 = run_online(cfg, ocfg, "lfu", seed=3)
-    assert r1 == r2
+    from repro.traces.registry import default_workload
+    wl = default_workload(cfg, ocfg)
+    r1 = run_online(wl, "lfu", cfg=cfg, ocfg=ocfg, engine="numpy", seed=3)
+    r2 = run_online(wl, "lfu", cfg=cfg, ocfg=ocfg, engine="numpy", seed=3)
+    assert r1["avg_qoe"] == r2["avg_qoe"]
+    assert r1["hit_rate"] == r2["hit_rate"]
+    np.testing.assert_array_equal(r1["slot_qoe"], r2["slot_qoe"])
 
 
 def test_run_online_custom_trace():
@@ -104,7 +115,7 @@ def test_run_online_custom_trace():
     ocfg = OnlineConfig(n_slots=10)
     tr = make_trace("flash_crowd", cfg, ocfg.n_slots, seed=1, n_events=1,
                     duration=5)
-    r = run_online(cfg, ocfg, "cocar-ol", trace=tr)
+    r = run_online(tr, "cocar-ol", cfg=cfg, ocfg=ocfg, engine="numpy")
     assert 0 <= r["avg_qoe"] <= 1 and 0 <= r["hit_rate"] <= 1
 
 
@@ -116,21 +127,23 @@ def test_trace_shape_mismatch_rejected():
     ocfg = OnlineConfig(n_slots=10)
     long_tr = make_trace("stationary", cfg, 40, seed=0)
     with pytest.raises(ValueError):
-        run_online(cfg, ocfg, "lfu", trace=long_tr)
+        run_online(long_tr, "lfu", cfg=cfg, ocfg=ocfg, engine="numpy")
     with pytest.raises(ValueError):
-        run_online(cfg, ocfg, "lfu", trace=long_tr, backend="scan")
+        run_online(long_tr, "lfu", cfg=cfg, ocfg=ocfg, engine="scan")
     thin = MECConfig(n_users=50)
     with pytest.raises(ValueError):
-        run_online(thin, ocfg, "lfu",
-                   trace=make_trace("stationary", cfg, 10, seed=0))
+        run_online(make_trace("stationary", cfg, 10, seed=0), "lfu",
+                   cfg=thin, ocfg=ocfg, engine="numpy")
 
 
 def test_scan_backend_matches_numpy_backend():
+    from repro.traces.registry import default_workload
     cfg = MECConfig(n_users=60)
     ocfg = OnlineConfig(n_slots=20)
+    wl = default_workload(cfg, ocfg)
     for algo in ("cocar-ol", "random"):
-        a = run_online(cfg, ocfg, algo)
-        b = run_online(cfg, ocfg, algo, backend="scan")
+        a = run_online(wl, algo, cfg=cfg, ocfg=ocfg, engine="numpy")
+        b = run_online(wl, algo, cfg=cfg, ocfg=ocfg, engine="scan")
         assert abs(a["avg_qoe"] - b["avg_qoe"]) < 1e-9
         assert abs(a["hit_rate"] - b["hit_rate"]) < 1e-9
 

@@ -72,11 +72,14 @@ def test_plan_exits_any_cut_set(n_layers, cuts):
 
 
 def test_zoo_catalog_consistent():
-    from repro.mec.catalog import zoo_catalog
+    from repro.mec.catalog import make_catalog
     archs = ["qwen1.5-0.5b", "xlstm-125m"]
-    sizes, prec, flops, loadD = zoo_catalog(archs)
-    assert np.all(sizes[:, 0] == 0) and np.all(prec[:, 0] == 0)
-    assert np.all(np.diff(sizes[:, 1:], axis=1) > 0)
-    assert np.all(np.diff(prec[:, 1:], axis=1) > 0)
+    cat = make_catalog("zoo", arch_ids=archs)
+    assert cat.source == "zoo" and cat.n_models == len(archs)
+    assert cat.names == tuple(archs)
+    assert np.all(cat.sizes[:, 0] == 0) and np.all(cat.prec[:, 0] == 0)
+    assert np.all(np.diff(cat.sizes[:, 1:], axis=1) > 0)
+    assert np.all(np.diff(cat.prec[:, 1:], axis=1) > 0)
     # upgrades cost time, downgrades are cheap
-    assert loadD[0, 0, 1] > loadD[0, 2, 1]
+    assert cat.loadD[0, 0, 1] > cat.loadD[0, 2, 1]
+    assert cat.load_seconds(0, 0, 1) == cat.loadD[0, 0, 1]

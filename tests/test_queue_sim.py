@@ -63,3 +63,81 @@ def test_routing_prefers_precision_with_slack():
                        deadline=float(i) + 5.0) for i in range(4)]
     m = sim.run(reqs)
     assert all(r.pod == 1 for r in sim.done)       # deep submodel wins
+
+
+def test_deadline_miss_accounting():
+    """With admit_late, requests that cannot make their deadline are
+    served anyway and accounted as deadline misses; without it they are
+    dropped — the miss count is identical either way."""
+    residency = {0: {"a": 2}}
+    svc = QueueSim(CFGS, residency, COMPUTE).service_time("a", 2, 64)
+    # back-to-back arrivals with deadlines only one service time out:
+    # request k queues behind k-1 others, so only the first can make it
+    reqs = lambda: [SimRequest(rid=i, model="a", tokens=64, arrival=0.0,  # noqa: E731
+                               deadline=1.5 * svc) for i in range(4)]
+    drop = QueueSim(CFGS, residency, COMPUTE)
+    m_drop = drop.run(reqs())
+    late = QueueSim(CFGS, residency, COMPUTE, admit_late=True)
+    m_late = late.run(reqs())
+    assert m_drop["served"] == 1 and m_drop["dropped"] == 3
+    assert m_late["served"] == 4 and m_late["dropped"] == 0
+    assert sum(not r.met_slo for r in late.done) == 3
+    assert m_drop["deadline_misses"] == m_late["deadline_misses"] == 3
+    assert m_drop["slo_attainment"] == m_late["slo_attainment"] == 0.25
+
+
+def test_pod_failure_mid_queue():
+    """A pod failing at time t keeps its in-flight work but takes no new
+    arrivals — later requests re-route to the surviving pod."""
+    residency = {0: {"a": 2}, 1: {"a": 0}}
+    sim = QueueSim(CFGS, residency, COMPUTE, fail_at={0: 1.0})
+    reqs = [SimRequest(rid=i, model="a", tokens=16, arrival=0.5 * i,
+                       deadline=0.5 * i + 5.0) for i in range(5)]
+    sim.run(reqs)
+    pods = {r.arrival: r.pod for r in sim.done}
+    assert pods[0.0] == 0 and pods[0.5] == 0     # pre-failure: precision
+    assert all(p == 1 for t, p in pods.items() if t >= 1.0)
+    assert len(sim.done) == 5                     # nothing lost, re-routed
+
+
+def test_empty_residency_drops_everything():
+    sim = QueueSim(CFGS, {}, COMPUTE)
+    m = sim.run([SimRequest(rid=0, model="a", tokens=16, arrival=0.0,
+                            deadline=9.0)])
+    assert m["served"] == 0 and m["dropped"] == 1
+    assert m["slo_attainment"] == 0.0 and m["deadline_misses"] == 1
+    # and an all-empty per-pod residency behaves identically
+    sim2 = QueueSim(CFGS, {0: {}, 1: {}}, COMPUTE)
+    m2 = sim2.run([SimRequest(rid=0, model="a", tokens=16, arrival=0.0,
+                              deadline=9.0)])
+    assert m2["served"] == 0 and m2["dropped"] == 1
+
+
+def test_seed_determinism():
+    residency = {0: {"a": 2, "b": 1}, 1: {"a": 1, "b": 2}}
+    m1, n1 = _sim(residency, rate=40.0, seed=7)
+    m2, n2 = _sim(residency, rate=40.0, seed=7)
+    assert n1 == n2 and m1 == m2
+    m3, n3 = _sim(residency, rate=40.0, seed=8)
+    assert (n3, m3) != (n1, m1)                  # different draw
+
+
+def test_transfer_time_matches_pod_cache_byte_math():
+    """simulator.transfer_time (what ServingPlan availability times are
+    built from, via the measured catalog) == the seconds PodCache
+    actually takes for the same transition."""
+    from repro.serving.loader import PodCache, WeightStore
+    from repro.serving.simulator import transfer_time
+
+    bw = 250e6
+    store = WeightStore(CFGS, lazy=True)
+    for frm, to in ((-1, 0), (-1, 2), (0, 2), (1, 2)):
+        pod = PodCache(store, capacity_bytes=10**12, bandwidth_Bps=bw)
+        if frm >= 0:
+            pod.resident["a"] = frm              # no params needed: lazy
+        ev = pod.request_load("a", to, now=0.0)
+        want = transfer_time(CFGS["a"], frm, to, bw)
+        assert abs(ev.seconds - want) < 1e-12
+        assert ev.bytes == partition.delta_bytes(CFGS["a"], frm, to)
+    # shrinks are instant on both sides
+    assert transfer_time(CFGS["a"], 2, 1, bw) == 0.0

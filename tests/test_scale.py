@@ -282,8 +282,9 @@ def test_online_bucketed_grid_matches_solo_runs():
     assert len(res.results) == len(jobs)
     assert len(res.stats["plan"]) == 2     # two shape buckets
     for j, g in zip(jobs, res.results):
-        solo = E.run_online_scan(j["cfg"], OCFG, j["algo"],
-                                 trace=j["trace"], seed=j.get("seed", 0))
+        from repro.core.online import run_online
+        solo = run_online(j["trace"], j["algo"], cfg=j["cfg"], ocfg=OCFG,
+                          engine="scan", seed=j.get("seed", 0))
         np.testing.assert_array_equal(g["slot_qoe"], solo["slot_qoe"])
         np.testing.assert_array_equal(g["final_state"].lvl,
                                       solo["final_state"].lvl)

@@ -1,0 +1,176 @@
+"""The decision bridge: control-plane caching arrays / online cache
+states -> per-pod residency plans with measured loading times, executed
+by the queue simulator (no hand-constructed residency anywhere)."""
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.online import OnlineConfig, run_online
+from repro.mec.catalog import (crosscheck_table3, make_catalog,
+                               table3_mem_rate)
+from repro.mec.scenario import MECConfig
+from repro.models import partition
+from repro.serving.plan import (cache_levels, catalog_precisions,
+                                check_mid_download_never_serves,
+                                execute_plan, plan_from_offline,
+                                plans_from_online_states)
+from repro.serving.simulator import SimRequest
+from repro.traces.registry import default_workload
+
+ARCHS = ("qwen1.5-0.5b", "stablelm-12b", "chatglm3-6b")
+SMOKE = {a: configs.get_smoke(a) for a in ARCHS}
+
+
+def _onehot(lvl, H=3):
+    """(N, M) levels -> (N, M, H+1) one-hot, the control-plane layout."""
+    lvl = np.asarray(lvl)
+    x = np.zeros(lvl.shape + (H + 1,))
+    np.put_along_axis(x, lvl[..., None], 1.0, axis=-1)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# offline decisions -> plans
+# ---------------------------------------------------------------------------
+
+def test_plan_from_offline_mapping():
+    lvl = np.array([[0, 2], [3, 1]])
+    plan = plan_from_offline(_onehot(lvl), names=("a", "b"), policy="cocar")
+    assert plan.residency == {0: {"b": 1}, 1: {"a": 2, "b": 0}}
+    assert plan.source == "offline:cocar"
+    np.testing.assert_array_equal(plan.lvl, lvl)
+    assert plan.n_pods == 2 and plan.max_load_s() == 0.0
+
+
+def test_plan_from_offline_load_times_from_catalog():
+    cat = make_catalog("measured", cfgs=SMOKE, tokens=64)
+    names = list(SMOKE)
+    lvl = np.array([[2, 0, 1], [0, 3, 0]])
+    prev = np.array([[1, 0, 1], [0, 0, 0]])
+    plan = plan_from_offline(_onehot(lvl), names, catalog=cat,
+                             x_prev=_onehot(prev))
+    # upgraded (pod, model) pairs get the transition's measured seconds
+    assert plan.available_at[(0, names[0])] == cat.load_seconds(0, 1, 2)
+    assert plan.available_at[(1, names[1])] == cat.load_seconds(1, 0, 3)
+    # unchanged residency ((0, names[2]) stays at level 1) loads nothing
+    assert (0, names[2]) not in plan.available_at
+    # and the measured seconds are exactly delta_bytes / bandwidth
+    nb = partition.delta_bytes(SMOKE[names[0]], 0, 1)
+    assert abs(plan.available_at[(0, names[0])]
+               - nb / (cat.bandwidth_MBps * 1e6)) < 1e-12
+    # default x_prev is a cold start: every resident level loads
+    cold = plan_from_offline(_onehot(lvl), names, catalog=cat)
+    assert (0, names[2]) in cold.available_at
+    assert cold.max_load_s() >= plan.max_load_s()
+
+
+def test_cache_levels_rejects_bad_shape():
+    with pytest.raises(ValueError, match="one-hot"):
+        cache_levels(np.zeros((2, 3)))
+    with pytest.raises(ValueError, match="names"):
+        plan_from_offline(_onehot(np.zeros((2, 3), int)), names=("a",))
+
+
+def test_execute_plan_load_delay_costs_slo():
+    """The same decision, with vs without its measured loading delay:
+    delay can only hurt SLO attainment, and early requests stall until
+    the bytes land."""
+    # a deliberately slow link so the smoke models' bytes take seconds
+    cat = make_catalog("measured", cfgs=SMOKE, tokens=64,
+                       bandwidth_MBps=0.5)
+    names = list(SMOKE)
+    lvl = np.array([[3, 0, 0], [0, 1, 0]])
+    plan = plan_from_offline(_onehot(lvl), names, catalog=cat)
+    c = partition.submodel_flops_per_token(SMOKE[names[0]], 2, ctx=64)
+    compute = 64 * c / 0.05
+    t0 = plan.available_at[(0, names[0])]
+    assert t0 > 1.0                              # the delay is material
+    reqs = lambda: [SimRequest(rid=i, model=names[0], tokens=64,  # noqa: E731
+                               arrival=0.1 * i, deadline=0.1 * i + 0.1)
+                    for i in range(8)]
+    hot = execute_plan(plan, SMOKE, compute, reqs(), catalog=cat,
+                       names=names, with_load_delay=False)
+    cold = execute_plan(plan, SMOKE, compute, reqs(), catalog=cat,
+                        names=names, with_load_delay=True, admit_late=True)
+    assert hot["slo_attainment"] > cold["slo_attainment"]
+    assert cold["p95_latency"] > hot["p95_latency"]
+    # delivered precision comes from the catalog ladder, not the default
+    assert hot["avg_precision"] == pytest.approx(float(cat.prec[0, 3]))
+
+
+# ---------------------------------------------------------------------------
+# online per-slot states -> plans
+# ---------------------------------------------------------------------------
+
+CFG = MECConfig(n_bs=3, n_users=40, n_models=4, seed=0)
+OCFG = OnlineConfig(n_slots=12, rounds=2)
+
+
+def test_record_states_numpy_scan_identical():
+    wl = default_workload(CFG, OCFG)
+    a = run_online(wl, "cocar-ol", cfg=CFG, ocfg=OCFG, engine="numpy",
+                   record_states=True)
+    b = run_online(wl, "cocar-ol", cfg=CFG, ocfg=OCFG, engine="scan",
+                   record_states=True)
+    for k in ("lvl", "dl", "target"):
+        assert a["states"][k].shape == (OCFG.n_slots, CFG.n_bs,
+                                        CFG.n_models)
+        np.testing.assert_array_equal(
+            np.asarray(a["states"][k], np.int32),
+            np.asarray(b["states"][k], np.int32))
+    # recording is decision-inert
+    off = run_online(wl, "cocar-ol", cfg=CFG, ocfg=OCFG, engine="scan")
+    np.testing.assert_array_equal(off["slot_qoe"], b["slot_qoe"])
+    assert "states" not in off
+
+
+def test_mid_download_never_serves():
+    wl = default_workload(CFG, OCFG)
+    out = run_online(wl, "cocar-ol", cfg=CFG, ocfg=OCFG, engine="scan",
+                     record_states=True)
+    verdict = check_mid_download_never_serves(out["states"])
+    assert verdict["ok"] and not verdict["vacuous"]
+    # residency built from lvl structurally excludes in-flight targets
+    names = [f"m{i}" for i in range(CFG.n_models)]
+    plans = plans_from_online_states(out["states"], names, algo="cocar-ol")
+    assert len(plans) == OCFG.n_slots
+    dl = np.asarray(out["states"]["dl"], bool)
+    tgt = np.asarray(out["states"]["target"])
+    for t, plan in enumerate(plans):
+        for n, m in zip(*np.nonzero(dl[t])):
+            res = plan.residency[n].get(names[m], -1)
+            assert res + 1 < tgt[t, n, m]
+    # a doctored state (serving the in-flight target) is caught
+    bad = {k: np.asarray(v).copy() for k, v in out["states"].items()}
+    n0 = tuple(np.argwhere(dl)[0])
+    bad["lvl"][n0] = bad["target"][n0]
+    assert not check_mid_download_never_serves(bad)["ok"]
+
+
+# ---------------------------------------------------------------------------
+# measured catalog provenance
+# ---------------------------------------------------------------------------
+
+def test_measured_catalog_crosschecks_table3():
+    cat = make_catalog("measured", cfgs=SMOKE, tokens=64)
+    chk = crosscheck_table3(cat)
+    band = table3_mem_rate()
+    assert chk["ok"]
+    assert chk["bandwidth_MBps"] == pytest.approx(band["median"])
+    assert band["min"] < band["median"] < band["max"]
+    # an out-of-band bandwidth fails the cross-check
+    fast = make_catalog("measured", cfgs=SMOKE, tokens=64,
+                        bandwidth_MBps=10 * band["max"])
+    assert not crosscheck_table3(fast)["ok"]
+    # shrinks are instant, upgrades strictly positive
+    assert np.all(cat.loadD[:, 2, 1] == 0.0)
+    assert np.all(cat.loadD[:, 0, 1:] > 0.0)
+
+
+def test_catalog_precisions_match_ladder():
+    cat = make_catalog("measured", cfgs=SMOKE, tokens=64)
+    names = list(SMOKE)
+    prec = catalog_precisions(cat, names)
+    assert prec[(names[0], 0)] == float(cat.prec[0, 1])
+    assert prec[(names[2], 2)] == float(cat.prec[2, 3])
+    assert len(prec) == len(names) * cat.H

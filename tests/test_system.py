@@ -41,8 +41,11 @@ def test_dynamic_beats_static_motivating_example():
 
 
 def test_online_end_to_end():
+    from repro.traces.registry import default_workload
     cfg = MECConfig(n_users=120)
-    r = run_online(cfg, OnlineConfig(n_slots=40), "cocar-ol")
+    ocfg = OnlineConfig(n_slots=40)
+    r = run_online(default_workload(cfg, ocfg), "cocar-ol", cfg=cfg,
+                   ocfg=ocfg)
     assert 0 < r["avg_qoe"] <= 1.0
     assert 0 < r["hit_rate"] <= 1.0
 

@@ -4,7 +4,7 @@ download state machine edge cases, Eqs. 35-37)."""
 import numpy as np
 import pytest
 
-from repro.core.online import OnlineConfig, OnlineSim
+from repro.core.online import OnlineConfig, OnlineSim, run_online
 from repro.mec.scenario import MECConfig
 from repro.traces import available, draw_decision_stream, make_trace
 from repro.traces import engine as E
@@ -143,8 +143,8 @@ STREAM = draw_decision_stream(T, OCFG.rounds, N, M, CFG.seed + 99)
 @pytest.mark.parametrize("algo", E.POLICIES)
 def test_scan_matches_numpy(algo):
     qs, hs, sim = _numpy_reference(CFG, OCFG, algo, STAT_TRACE, STREAM)
-    res = E.run_online_scan(CFG, OCFG, algo, trace=STAT_TRACE,
-                            stream=STREAM)
+    res = run_online(STAT_TRACE, algo, cfg=CFG, ocfg=OCFG,
+                     engine="scan", stream=STREAM)
     np.testing.assert_allclose(res["slot_qoe"], qs, rtol=1e-9, atol=1e-9)
     np.testing.assert_array_equal(res["slot_hits"], hs)
     fs = res["final_state"]
@@ -156,8 +156,8 @@ def test_scan_matches_numpy(algo):
 def test_scan_matches_numpy_no_partition():
     ocfg = OnlineConfig(n_slots=T, partition=False)
     qs, _, sim = _numpy_reference(CFG, ocfg, "cocar-ol", STAT_TRACE, STREAM)
-    res = E.run_online_scan(CFG, ocfg, "cocar-ol", trace=STAT_TRACE,
-                            stream=STREAM)
+    res = run_online(STAT_TRACE, "cocar-ol", cfg=CFG, ocfg=ocfg,
+                     engine="scan", stream=STREAM)
     np.testing.assert_allclose(res["slot_qoe"], qs, rtol=1e-9, atol=1e-9)
     np.testing.assert_array_equal(res["final_state"].lvl,
                                   np.argmax(sim.X, -1))
@@ -195,9 +195,11 @@ def test_grid_mixed_shapes_bucketed():
             dict(cfg=cfg2, algo="lfu", seed=3)]
     grid = E.run_online_grid(jobs, OCFG)
     assert len(grid) == 2
-    solo0 = E.run_online_scan(CFG, OCFG, "lfu", trace=STAT_TRACE,
-                              stream=STREAM)
-    solo1 = E.run_online_scan(cfg2, OCFG, "lfu", seed=3)
+    solo0 = run_online(STAT_TRACE, "lfu", cfg=CFG, ocfg=OCFG,
+                       engine="scan", stream=STREAM)
+    from repro.traces.registry import default_trace
+    solo1 = run_online(default_trace(cfg2, OCFG), "lfu", cfg=cfg2,
+                       ocfg=OCFG, engine="scan", seed=3)
     np.testing.assert_array_equal(grid[0]["slot_qoe"], solo0["slot_qoe"])
     np.testing.assert_array_equal(grid[1]["slot_qoe"], solo1["slot_qoe"])
     np.testing.assert_array_equal(grid[1]["final_state"].lvl,
@@ -216,11 +218,6 @@ def test_online_sweep_rows():
         assert set(r) == {"mem_capacity_mb", "workload", "family", "algo",
                           "avg_qoe", "hit_rate"}
         assert 0.0 <= r["avg_qoe"] <= 1.0
-    # the deprecated traces= alias feeds the same path
-    alias = run_online_sweep(
-        base=CFG, axes={"mem_capacity_mb": (300.0,)},
-        traces=("stationary",), policies=("cocar-ol",), ocfg=OCFG)
-    assert alias[0]["workload"] == "stationary"
 
 
 # ---------------------------------------------------------------------------

@@ -171,27 +171,6 @@ def test_unified_engines_agree():
         run_online(wl, "lfu")
 
 
-# ----------------------------------------------------------- legacy shims
-
-def test_legacy_run_online_shim_warns_and_matches():
-    with pytest.warns(DeprecationWarning, match="build a Workload"):
-        old = run_online(CFG, OCFG, "cocar-ol", backend="numpy")
-    new = run_online(default_workload(CFG, OCFG), "cocar-ol", cfg=CFG,
-                     ocfg=OCFG, engine="numpy")
-    assert old["avg_qoe"] == new["avg_qoe"]
-    assert old["hit_rate"] == new["hit_rate"]
-
-
-def test_legacy_run_online_scan_shim_warns_and_matches():
-    with pytest.warns(DeprecationWarning, match="run_online_scan"):
-        old = E.run_online_scan(CFG, OCFG, "lfu")
-    new = run_online(default_workload(CFG, OCFG), "lfu", cfg=CFG, ocfg=OCFG,
-                     engine="scan")
-    np.testing.assert_array_equal(old["slot_qoe"], new["slot_qoe"])
-    np.testing.assert_array_equal(old["final_state"].lvl,
-                                  new["final_state"].lvl)
-
-
 def test_new_api_emits_no_deprecation_warning(recwarn):
     run_online(stat_workload(), "lfu", cfg=CFG, ocfg=OCFG, engine="numpy")
     assert not [w for w in recwarn.list
