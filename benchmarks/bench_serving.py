@@ -15,7 +15,15 @@ profiles anywhere.  Four blocks, persisted as
     through ``QueueSim`` twice per Poisson rate — idealised instant
     loading vs the plan's measured loading delay.  The headline flag
     ``ranking_preserved`` records whether CoCaR still beats every
-    baseline on delivered precision once loading delay is simulated;
+    baseline on delivered precision once loading delay is simulated.
+    Every run is tapped by the request-level telemetry (``repro.obs``):
+    a shared event log (conservation-checked: each arrival terminates
+    exactly once) and per-policy merged streaming histograms, from which
+    each policy gets an ``attribution`` block — the fraction of
+    delivered latency spent queueing vs loading-stalled vs in service,
+    with phase percentiles — and the per-request identity
+    ``queue_s + stall_s + service_s == latency`` is asserted exact to
+    1e-9 over the whole bench;
   * **agreement** — the catalog's D_m seconds == the seconds
     ``serving.loader.PodCache`` actually takes for the same transitions
     (same ``delta_bytes`` math, byte-for-byte; lazy weight store, so the
@@ -47,7 +55,7 @@ from repro.core import cocar as CC
 from repro.core.online import OnlineConfig, run_online
 from repro.mec.catalog import crosscheck_table3, make_catalog
 from repro.mec.scenario import MECConfig, Scenario, stack_instances
-from repro.obs import TRACER
+from repro.obs import TRACER, EventLog, MetricsRegistry, observe_online_diag
 from repro.serving.loader import PodCache, WeightStore
 from repro.serving.plan import (catalog_precisions,
                                 check_mid_download_never_serves,
@@ -88,9 +96,24 @@ def _mean(rows, key):
     return float(np.mean([r[key] for r in rows]))
 
 
-def bench_offline():
+#: per-request latency attribution must telescope exactly (Eq. 40 terms)
+ATTRIBUTION_TOL = 1e-9
+_PHASES = ("queue", "stall", "service")
+_ROW_KEYS = ("slo_attainment", "p50_latency", "p95_latency",
+             "p99_latency", "avg_precision", "served", "deadline_misses")
+
+
+def bench_offline(events: EventLog = None,
+                  registry: MetricsRegistry = None):
     """All five policies' actual decisions, executed with vs without
-    their measured loading delay, across a Poisson rate sweep."""
+    their measured loading delay, across a Poisson rate sweep.
+
+    ``events``/``registry`` attach the request-level telemetry taps
+    (decision-inert; the numbers below are identical without them): one
+    lifecycle event per request phase into the shared log, and one
+    metrics registry per (policy, window, rate) run, merged per policy —
+    the merge order never matters (fixed-bucket histograms) — to pool
+    phase percentiles across the rate sweep."""
     cfgs, cat, sc = _offline_scenario()
     names = list(ARCHS)
     compute_flops = sc.cfg.compute_gflops * 1e9
@@ -106,10 +129,12 @@ def bench_offline():
         plans = CC.export_cache_plans(grid, stacked)
 
     per_policy = {}
+    max_att_err = 0.0
     with TRACER.span("serving:data_plane", rates=len(RATES)):
         for p in CC.OFFLINE_POLICIES:
             ideal_rows, delayed_rows = [], []
             max_load = 0.0
+            reg_p = MetricsRegistry()
             for w in range(N_WINDOWS):
                 # window 0 is a cold start; window 1 loads only the Δ
                 # from the same policy's previous decision
@@ -123,25 +148,44 @@ def bench_offline():
                     arr = lambda: poisson_arrivals(  # noqa: E731
                         rate, DURATION_S, names, sc.pop, tokens=TOKENS,
                         slo_s=SLO_S, seed=100 * w + k)
+                    reg_run = MetricsRegistry()
                     ideal_rows.append(execute_plan(
                         plan, cfgs, compute_flops, arr(), catalog=cat,
-                        names=names, with_load_delay=False))
+                        names=names, with_load_delay=False,
+                        events=events))
                     delayed_rows.append(execute_plan(
                         plan, cfgs, compute_flops, arr(), catalog=cat,
-                        names=names, with_load_delay=True))
+                        names=names, with_load_delay=True,
+                        events=events, registry=reg_run))
+                    reg_p.merge(reg_run)
+            max_att_err = max(
+                max_att_err,
+                max(r["attribution_max_err"]
+                    for r in ideal_rows + delayed_rows))
+            # pooled attribution: exact phase fractions from per-run
+            # sums, percentiles from the merged streaming histograms
+            sums = {ph: sum(r["attribution"][ph]["sum"]
+                            for r in delayed_rows) for ph in _PHASES}
+            lat_total = sum(sums.values())
+            hists = {ph: reg_p.histogram(f"request_{ph}_seconds")
+                     for ph in _PHASES}
+            attribution = {
+                ph: {"frac": sums[ph] / lat_total if lat_total else 0.0,
+                     "p50": hists[ph].percentile(50),
+                     "p95": hists[ph].percentile(95),
+                     "p99": hists[ph].percentile(99)}
+                for ph in _PHASES}
             per_policy[p] = {
                 "lp_avg_precision": float(np.mean(
                     [plans[p][w]["metrics"]["avg_precision"]
                      for w in range(N_WINDOWS)])),
                 "max_load_s": max_load,
-                "ideal": {k: _mean(ideal_rows, k) for k in
-                          ("slo_attainment", "p95_latency",
-                           "avg_precision", "served", "deadline_misses")},
-                "delayed": {k: _mean(delayed_rows, k) for k in
-                            ("slo_attainment", "p95_latency",
-                             "avg_precision", "served",
-                             "deadline_misses")},
+                "ideal": {k: _mean(ideal_rows, k) for k in _ROW_KEYS},
+                "delayed": {k: _mean(delayed_rows, k) for k in _ROW_KEYS},
+                "attribution": attribution,
             }
+            if registry is not None:
+                registry.merge(reg_p)
             common.csv_row(
                 f"serving_{p}", 0,
                 f"slo={per_policy[p]['delayed']['slo_attainment']:.3f};"
@@ -167,6 +211,8 @@ def bench_offline():
         # residencies came from policy_grid_device arrays, not by hand
         "decisions_from_control_plane": True,
         "per_policy": per_policy,
+        "attribution_max_err": max_att_err,
+        "attribution_exact": bool(max_att_err <= ATTRIBUTION_TOL),
         "ranking_preserved": bool(
             delayed_prec["cocar"] >= best_base - 1e-12),
         "cocar_over_best_baseline": delayed_prec["cocar"]
@@ -210,9 +256,12 @@ def _online_scenario():
     return cfgs, cat, Scenario(mcfg, catalog=cat)
 
 
-def bench_online():
+def bench_online(events: EventLog = None,
+                 registry: MetricsRegistry = None):
     """CoCaR-OL per-slot cache states -> per-slot serving plans, checked
-    and executed."""
+    and executed.  The scan run's per-slot telemetry (hit rate,
+    downloads in flight, evictions) feeds the same histogram schema the
+    offline serving runs use — one textfile for both planes."""
     cfgs, cat, sc = _online_scenario()
     names = list(ONLINE_ARCHS)
     ocfg = OnlineConfig(n_slots=ONLINE_SLOTS, rounds=2)
@@ -221,9 +270,12 @@ def bench_online():
 
     with TRACER.span("serving:online", slots=ONLINE_SLOTS):
         scan = run_online(wl, "cocar-ol", cfg=sc.cfg, ocfg=ocfg,
-                          engine="scan", record_states=True, scenario=sc)
+                          engine="scan", record_states=True, scenario=sc,
+                          diagnostics=registry is not None)
         ref = run_online(wl, "cocar-ol", cfg=sc.cfg, ocfg=ocfg,
                          engine="numpy", record_states=True, scenario=sc)
+    if registry is not None and "diagnostics" in scan:
+        observe_online_diag(registry, scan["diagnostics"])
     states_equal = all(
         np.array_equal(np.asarray(scan["states"][k], np.int32),
                        np.asarray(ref["states"][k], np.int32))
@@ -241,7 +293,8 @@ def bench_online():
         arr = poisson_arrivals(20.0, 2.0, names, sc.pop, tokens=32,
                                slo_s=0.5, seed=t)
         rows.append(execute_plan(plans[t], cfgs, compute_flops, arr,
-                                 catalog=cat, names=names))
+                                 catalog=cat, names=names, events=events,
+                                 registry=registry))
     exec_out = {"slots_executed": len(rows),
                 "served": int(sum(r["served"] for r in rows)),
                 "slo_attainment": _mean(rows, "slo_attainment"),
@@ -291,29 +344,43 @@ def bench_cluster(plans):
 
 
 def run(subdir=None):
+    events, registry = EventLog(), MetricsRegistry()
     with TRACER.span("bench_serving"):
-        offline = bench_offline()
+        offline = bench_offline(events, registry)
         agreement = bench_agreement()
-        online, plans = bench_online()
+        online, plans = bench_online(events, registry)
         cluster = bench_cluster(plans)
+    conservation = events.conservation()
     out = {"offline": offline, "agreement": agreement, "online": online,
-           "cluster": cluster}
+           "cluster": cluster, "events": conservation,
+           "events_conserved": conservation["ok"]}
     path = common.save("BENCH_serving", out, subdir=subdir)
     TRACER.export_jsonl(path.with_name(path.stem + ".trace.jsonl"))
+    events.export_jsonl(path.with_name(path.stem + ".events.jsonl"))
+    registry.export_prometheus(path.with_name(path.stem + ".metrics.prom"))
+    registry.export_json(path.with_name(path.stem + ".metrics.json"))
 
     assert offline["decisions_from_control_plane"]
     assert offline["catalog"]["crosscheck"]["ok"], offline["catalog"]
     assert offline["ranking_preserved"], offline["per_policy"]
+    assert offline["attribution_exact"], offline["attribution_max_err"]
+    assert conservation["ok"], conservation
     assert agreement["max_transfer_gap_s"] < 1e-9, agreement
     assert online["states_equal_numpy_scan"], online
     assert online["mid_download_never_serves"], online
     assert not online["vacuous"], online
     assert cluster["real_generation"], cluster
+    att = offline["per_policy"]["cocar"]["attribution"]
     print(f"serving: CoCaR delivered precision "
           f"{offline['per_policy']['cocar']['delayed']['avg_precision']:.3f}"
           f" under measured loading delay "
           f"({offline['cocar_over_best_baseline']:.2f}x best baseline; "
           f"ranking preserved: {offline['ranking_preserved']}); "
+          f"latency attribution queue/stall/service = "
+          f"{att['queue']['frac']:.1%}/{att['stall']['frac']:.1%}/"
+          f"{att['service']['frac']:.1%} "
+          f"(exact to {ATTRIBUTION_TOL:g}; events conserved over "
+          f"{conservation['n_arrivals']} arrivals); "
           f"max cold load "
           f"{offline['catalog']['max_cold_load_s']:.1f}s at "
           f"{offline['catalog']['bandwidth_MBps']:.0f} MB/s "

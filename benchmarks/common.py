@@ -35,8 +35,10 @@ def save(name: str, payload, subdir: str = None):
     """Persist a result payload; ``subdir`` keeps scratch outputs (e.g.
     the CI smoke runs) out of the committed baseline files.  A sibling
     ``<name>.manifest.json`` (git SHA, jax/device info, config hash —
-    ``repro.obs.manifest``) records the provenance of every run; the
-    manifests are gitignored, so committed baselines stay clean."""
+    ``repro.obs.manifest``) records the provenance of every run;
+    scratch-run manifests are gitignored, but every committed
+    ``results/bench/BENCH_*.json`` baseline ships with its manifest
+    sibling."""
     from repro.obs import write_manifest
 
     root = RESULTS / subdir if subdir else RESULTS

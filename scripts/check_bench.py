@@ -115,13 +115,31 @@ MANIFEST = {
         "flags": ["offline.decisions_from_control_plane",
                   "offline.ranking_preserved",
                   "offline.catalog.crosscheck.ok",
+                  "offline.attribution_exact",
+                  "events_conserved",
                   "online.states_equal_numpy_scan",
                   "online.mid_download_never_serves",
                   "online.in_flight_nonvacuous",
                   "cluster.real_generation"],
-        # the headline margin: CoCaR's delivered precision under loading
-        # delay over the best baseline's
-        "drifts": [("offline.cocar_over_best_baseline", 0.2)],
+        # the headline margin (CoCaR's delivered precision under loading
+        # delay over the best baseline's) plus the request-level latency
+        # attribution: phase fractions and percentiles of CoCaR's
+        # delayed runs — deterministic simulation at a fixed scale, so a
+        # move beyond tolerance means the serving behaviour changed
+        "drifts": [("offline.cocar_over_best_baseline", 0.2),
+                   ("offline.per_policy.cocar.attribution.stall.frac",
+                    0.25),
+                   ("offline.per_policy.cocar.attribution.queue.frac",
+                    0.25),
+                   ("offline.per_policy.cocar.attribution.service.frac",
+                    0.25),
+                   ("offline.per_policy.cocar.attribution.stall.p95",
+                    0.25),
+                   ("offline.per_policy.cocar.attribution.service.p95",
+                    0.25),
+                   ("offline.per_policy.cocar.delayed.p95_latency", 0.25),
+                   ("offline.per_policy.cocar.delayed.p99_latency",
+                    0.25)],
         "drift_scale": ["offline.n_pods", "offline.n_models",
                         "offline.n_users", "offline.n_windows",
                         "offline.pdhg_iters", "offline.duration_s"],

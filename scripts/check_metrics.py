@@ -1,0 +1,162 @@
+#!/usr/bin/env python3
+"""Schema check for the Prometheus textfiles the metrics layer exports.
+
+Validates structure, not values (values are check_bench.py's job):
+
+  * every metric sample is preceded by matching ``# TYPE`` metadata;
+  * histogram families carry cumulative ``_bucket{le=...}`` series with
+    non-decreasing counts, a terminal ``le="+Inf"`` bucket equal to
+    ``_count``, and a ``_sum`` sample;
+  * counters are finite and non-negative;
+  * with ``--require``, the named metric families must be present
+    (e.g. the serving schema's ``repro_request_latency_seconds``).
+
+stdlib-only (the CI gate must run with no deps), importable for tests:
+
+    python scripts/check_metrics.py FILE [FILE ...] \
+        [--require repro_request_latency_seconds ...]
+
+Exit 0 = schema ok, 1 = violation (listed on stdout).
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import pathlib
+import re
+import sys
+
+_SAMPLE = re.compile(
+    r'^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)'
+    r'(?:\{(?P<labels>[^}]*)\})?\s+(?P<value>\S+)$')
+
+#: the serving-plane families BENCH_serving textfiles must carry
+SERVING_REQUIRED = (
+    "repro_request_latency_seconds",
+    "repro_request_queue_seconds",
+    "repro_request_stall_seconds",
+    "repro_request_service_seconds",
+    "repro_requests_served_total",
+)
+
+
+def parse_textfile(text: str) -> dict:
+    """{family: {"type": str, "samples": [(name, labels, value)]}} —
+    raises ValueError on lines that are neither comments nor samples."""
+    families: dict = {}
+    types: dict = {}
+    for ln, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            _, _, name, mtype = line.split(None, 3)
+            types[name] = mtype
+            families.setdefault(name, {"type": mtype, "samples": []})
+            continue
+        if line.startswith("#"):
+            continue
+        m = _SAMPLE.match(line)
+        if not m:
+            raise ValueError(f"line {ln}: unparseable sample {line!r}")
+        name = m.group("name")
+        base = re.sub(r"_(bucket|sum|count)$", "", name)
+        fam = base if base in types else name
+        families.setdefault(fam, {"type": types.get(fam, "untyped"),
+                                  "samples": []})
+        families[fam]["samples"].append(
+            (name, m.group("labels") or "", float(m.group("value"))))
+    return families
+
+
+def check_family(fam: str, info: dict) -> list:
+    """Schema violations for one metric family (empty list = ok)."""
+    errs = []
+    mtype, samples = info["type"], info["samples"]
+    if mtype == "untyped":
+        errs.append(f"{fam}: sample without # TYPE metadata")
+    if not samples:
+        errs.append(f"{fam}: # TYPE with no samples")
+        return errs
+    if mtype == "histogram":
+        buckets = [(lb, v) for n, lb, v in samples
+                   if n == f"{fam}_bucket"]
+        count = [v for n, _, v in samples if n == f"{fam}_count"]
+        total = [v for n, _, v in samples if n == f"{fam}_sum"]
+        if not buckets:
+            errs.append(f"{fam}: histogram with no _bucket series")
+            return errs
+        if len(count) != 1 or len(total) != 1:
+            errs.append(f"{fam}: expected exactly one _count and _sum")
+            return errs
+        les, last = [], -math.inf
+        for lb, v in buckets:
+            m = re.search(r'le="([^"]+)"', lb)
+            if not m:
+                errs.append(f"{fam}: bucket without le label ({lb!r})")
+                continue
+            le = math.inf if m.group(1) == "+Inf" else float(m.group(1))
+            les.append(le)
+            if v < last:
+                errs.append(f"{fam}: bucket counts not cumulative at "
+                            f'le="{m.group(1)}" ({v} < {last})')
+            last = v
+        if les != sorted(les):
+            errs.append(f"{fam}: le edges not sorted")
+        if les and les[-1] != math.inf:
+            errs.append(f'{fam}: missing le="+Inf" bucket')
+        elif buckets and buckets[-1][1] != count[0]:
+            errs.append(f"{fam}: +Inf bucket {buckets[-1][1]} != _count "
+                        f"{count[0]}")
+    elif mtype == "counter":
+        for n, _, v in samples:
+            if v < 0 or not math.isfinite(v):
+                errs.append(f"{fam}: counter value {v} invalid")
+    elif mtype == "gauge":
+        for n, _, v in samples:
+            if not math.isfinite(v):
+                errs.append(f"{fam}: gauge value {v} not finite")
+    else:
+        errs.append(f"{fam}: unknown type {mtype!r}")
+    return errs
+
+
+def check_file(path, require=()) -> list:
+    text = pathlib.Path(path).read_text()
+    try:
+        families = parse_textfile(text)
+    except ValueError as e:
+        return [str(e)]
+    errs = []
+    for fam, info in sorted(families.items()):
+        errs += check_family(fam, info)
+    for fam in require:
+        if fam not in families:
+            errs.append(f"required metric family missing: {fam}")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Prometheus textfile schema gate")
+    ap.add_argument("files", nargs="+")
+    ap.add_argument("--require", nargs="*", default=None,
+                    help="metric families that must be present "
+                         "(default: the serving schema)")
+    args = ap.parse_args(argv)
+    require = (SERVING_REQUIRED if args.require is None
+               else tuple(args.require))
+    bad = 0
+    for f in args.files:
+        errs = check_file(f, require=require)
+        if errs:
+            bad += 1
+            print(f"FAIL {f}")
+            for e in errs:
+                print(f"  - {e}")
+        else:
+            print(f"ok   {f}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -59,22 +59,30 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     JAX_ENABLE_X64=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.bench_scale --smoke
 # closed-loop serving smoke: control-plane decisions -> ServingPlan ->
-# queue simulator under measured loading times.  Runs at the SAME fixed
-# scale as the committed baseline, so check_bench's flags (ranking
-# survives loading delay, Eq. 37 mid-download invariant, Table III
-# cross-check) and the cocar_over_best_baseline drift all engage here
+# queue simulator under measured loading times, with the request-level
+# telemetry always on (event log + streaming metrics).  Runs at the
+# SAME fixed scale as the committed baseline, so check_bench's flags
+# (ranking survives loading delay, exact latency attribution, event
+# conservation, Eq. 37 mid-download invariant, Table III cross-check)
+# and the attribution/percentile drifts all engage here
 JAX_ENABLE_X64=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.bench_serving --smoke
+# the Prometheus textfile the smoke just exported must parse and carry
+# the serving schema (cumulative buckets, _sum/_count consistency)
+python scripts/check_metrics.py results/bench/ci/BENCH_serving.metrics.prom
 # observability smoke (repro.obs): a tiny sharded offline sweep with the
 # jit-safe diagnostics taps ON, then report.py over its artifacts —
-# manifests, span traces, and the convergence gate (every smoke window
-# must clear DEFAULT_TOL; the truncated bench budgets above are
-# drift-gated by check_bench instead)
+# manifests, span traces, and the one uniform gate: PDHG convergence
+# (every smoke window must clear DEFAULT_TOL) plus the deadline-miss
+# regression check against the committed BENCH_serving baseline (the
+# serving smoke above writes the fresh copy into results/bench/ci)
 XLA_FLAGS=--xla_force_host_platform_device_count=2 \
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m repro.experiments.sweep --smoke --shard
-python scripts/report.py results/sweep/ci --check-converged \
-    | tee /tmp/obs_report.txt
+python scripts/report.py results/sweep/ci results/bench/ci \
+    --check-converged | tee /tmp/obs_report.txt
 grep -q "== Convergence" /tmp/obs_report.txt \
     || { echo "ci.sh: report.py produced no convergence section"; exit 1; }
+grep -q "== Deadline misses" /tmp/obs_report.txt \
+    || { echo "ci.sh: report.py produced no deadline-miss section"; exit 1; }
 python scripts/check_bench.py --fresh results/bench/ci

@@ -13,17 +13,22 @@ Scans a results directory (default ``results/sweep``) for
 
 and prints a compact report: slowest spans, per-jit retrace counts,
 per-chunk throughput (bytes / span seconds) and padding waste, the PDHG
-convergence table, and online cache telemetry.  Pure stdlib — no jax,
-no numpy — so it runs anywhere the JSON landed (CI artifact dirs,
-laptops, containers).
+convergence table, online cache telemetry, and the request-level
+telemetry of any ``BENCH_serving.json`` it finds — the per-policy
+latency-attribution table (fraction of delivered latency spent
+queueing vs loading-stalled vs in service, p50/p95/p99 per phase: the
+Eq. 40 decomposition made visible).  Pure stdlib — no jax, no numpy —
+so it runs anywhere the JSON landed (CI artifact dirs, laptops,
+containers).
 
 Usage:
     python scripts/report.py [DIR ...] [--top N] [--check-converged]
 
-``--check-converged`` exits 1 if any sweep window's final PDHG residual
-missed its tolerance — the sweep-side convergence gate (bench budgets
-are intentionally truncated and are drift-gated by ``check_bench.py``
-instead).
+``--check-converged`` is the one uniform CI gate: it exits 1 if any
+sweep window's final PDHG residual missed its tolerance OR if a scanned
+``BENCH_serving.json`` shows a per-policy ``deadline_misses`` regression
+against the committed ``results/bench/BENCH_serving.json`` baseline
+(bench speed/drift budgets stay with ``check_bench.py``).
 """
 from __future__ import annotations
 
@@ -221,6 +226,91 @@ def report_bench(root):
         print("\n".join(lines))
 
 
+def report_attribution(root):
+    """Per-policy latency attribution from BENCH_serving payloads: the
+    fraction of delivered latency from queueing vs loading vs service,
+    with per-phase percentiles (pooled streaming histograms)."""
+    printed = False
+    for p in sorted(root.glob("BENCH_*.json")):
+        payload = _load_json(p)
+        per_policy = ((payload or {}).get("offline") or {}).get("per_policy")
+        if not isinstance(per_policy, dict):
+            continue
+        rows = [(pol, d["attribution"]) for pol, d in per_policy.items()
+                if isinstance(d, dict) and "attribution" in d]
+        if not rows:
+            continue
+        if not printed:
+            print("\n== Latency attribution (delayed serving runs) ==")
+            printed = True
+        print(f"  {p.name}:")
+        print(f"    {'policy':10s} {'phase':8s} {'frac':>7s} "
+              f"{'p50':>9s} {'p95':>9s} {'p99':>9s}")
+        for pol, att in rows:
+            for ph in ("queue", "stall", "service"):
+                a = att.get(ph)
+                if a:
+                    print(f"    {pol:10s} {ph:8s} {a['frac']:7.1%} "
+                          f"{a['p50']:9.4f} {a['p95']:9.4f} "
+                          f"{a['p99']:9.4f}")
+
+
+def _repo_root():
+    return pathlib.Path(__file__).resolve().parent.parent
+
+
+def _baseline_serving():
+    """The committed BENCH_serving baseline: HEAD's copy via git,
+    falling back to the checked-out file (artifact dirs without git)."""
+    root = _repo_root()
+    rel = "results/bench/BENCH_serving.json"
+    try:
+        import subprocess
+        out = subprocess.run(["git", "-C", str(root), "show",
+                              f"HEAD:{rel}"], capture_output=True,
+                             text=True, timeout=30)
+        if out.returncode == 0:
+            return json.loads(out.stdout)
+    except Exception:
+        pass
+    p = root / rel
+    return _load_json(p) if p.exists() else None
+
+
+def check_deadline_misses(root, baseline=None, eps=1e-9):
+    """Deadline-miss regression gate: every policy's mean delayed
+    ``deadline_misses`` in a fresh BENCH_serving.json must not exceed
+    the committed baseline's.  Returns None when ``root`` carries no
+    BENCH_serving.json (gate not applicable), else the number of
+    regressing policies."""
+    p = root / "BENCH_serving.json"
+    fresh = _load_json(p) if p.exists() else None
+    if fresh is None:
+        return None
+    if baseline is None:
+        baseline = _baseline_serving()
+    if baseline is None:
+        print("\n== Deadline misses ==\n  [warn] no committed "
+              "BENCH_serving baseline; regression gate skipped")
+        return 0
+    print("\n== Deadline misses (delayed, vs committed baseline) ==")
+    bad = 0
+    per = ((fresh.get("offline") or {}).get("per_policy") or {})
+    base_per = ((baseline.get("offline") or {}).get("per_policy") or {})
+    for pol, d in per.items():
+        cur = (d.get("delayed") or {}).get("deadline_misses")
+        ref = ((base_per.get(pol) or {}).get("delayed")
+               or {}).get("deadline_misses")
+        if cur is None or ref is None:
+            continue
+        tag = "ok"
+        if cur > ref + eps:
+            bad += 1
+            tag = "REGRESSION"
+        print(f"  {pol:10s} {ref:8.3f} -> {cur:8.3f}  {tag}")
+    return bad
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("dirs", nargs="*", default=None,
@@ -234,6 +324,7 @@ def main(argv=None):
     dirs = [pathlib.Path(d) for d in (args.dirs or ["results/sweep"])]
 
     total_bad, any_conv = 0, False
+    miss_bad = 0
     for root in dirs:
         print(f"=== {root} ===")
         if not root.is_dir():
@@ -249,6 +340,10 @@ def main(argv=None):
             total_bad += bad
         report_online(root)
         report_bench(root)
+        report_attribution(root)
+        misses = check_deadline_misses(root)
+        if misses is not None:
+            miss_bad += misses
         print()
     if args.check_converged:
         if not any_conv:
@@ -258,7 +353,12 @@ def main(argv=None):
             print(f"check-converged: FAIL ({total_bad} window(s) above "
                   f"tolerance)")
             return 1
-        print("check-converged: OK (all windows within tolerance)")
+        if miss_bad:
+            print(f"check-converged: FAIL ({miss_bad} policy(ies) "
+                  f"regressed on deadline misses)")
+            return 1
+        print("check-converged: OK (converged; no deadline-miss "
+              "regressions)")
     return 0
 
 

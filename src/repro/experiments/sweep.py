@@ -226,7 +226,7 @@ def run_online_sweep(base: MECConfig = None, axes: dict = None,
                      workloads=None, policies=DEFAULT_POLICIES,
                      ocfg=None, seed: int = 0, backend: str = "vmap",
                      devices: int = None, chunk_size: int = 0,
-                     diagnostics: bool = False):
+                     diagnostics: bool = False, registry=None):
     """Cross (config grid x workload family x policy), run everything in
     one vmapped scan dispatch (``backend="sharded"`` spreads it across a
     host-device mesh).  ``workloads`` names registry families
@@ -235,7 +235,12 @@ def run_online_sweep(base: MECConfig = None, axes: dict = None,
     aggregated-demand engine).  ``diagnostics=True`` taps the per-slot
     cache telemetry inside the scan (hit rate, downloads in flight,
     evictions, cache occupancy) and adds summary columns — decisions and
-    QoE stay bit-identical.  Returns a list of row dicts in grid order."""
+    QoE stay bit-identical.  With a ``registry``
+    (``repro.obs.metrics.MetricsRegistry``) every job's per-slot curves
+    are additionally folded into the shared streaming-histogram schema
+    (``online_hit_rate`` / ``online_dl_in_flight`` / ``online_evictions``
+    — the same types the serving plane exports), still after the fact
+    and decision-inert.  Returns a list of row dicts in grid order."""
     from repro.core.online import OnlineConfig
     from repro.traces.engine import run_online_grid
     from repro.traces.registry import make_workload
@@ -266,6 +271,10 @@ def run_online_sweep(base: MECConfig = None, axes: dict = None,
             row["mean_dl_in_flight"] = float(np.mean(d["dl_in_flight"]))
             row["evictions"] = float(np.sum(d["evictions"]))
             row["final_cache_mb"] = float(d["cache_mb"][-1])
+            if registry is not None:
+                from repro.obs import observe_online_diag
+
+                observe_online_diag(registry, d)
         rows.append(row)
     return rows
 
@@ -296,7 +305,7 @@ def main(online: bool = False, backend: str = "device", n_seeds: int = 1,
          policies: bool = False, devices: int = None, chunk_size: int = 0,
          max_buckets: int = 1, diagnostics: bool = True,
          smoke: bool = False):
-    payload = None
+    payload, registry = None, None
     kind = "online" if online else "policy" if policies else "offline"
     out = pathlib.Path("results") / "sweep" / ("ci" if smoke else "")
     with TRACER.span("sweep", kind=kind, backend=backend, smoke=smoke,
@@ -309,10 +318,13 @@ def main(online: bool = False, backend: str = "device", n_seeds: int = 1,
                              diagnostics=diagnostics)
             name = "grid.json"
         elif online:
+            from repro.obs import MetricsRegistry
+
+            registry = MetricsRegistry() if diagnostics else None
             rows = run_online_sweep(
                 backend="sharded" if backend == "sharded" else "vmap",
                 devices=devices, chunk_size=chunk_size,
-                diagnostics=diagnostics)
+                diagnostics=diagnostics, registry=registry)
             name = "online_grid.json"
         elif policies:
             rows, summary = run_policy_sweep(backend=backend,
@@ -343,6 +355,10 @@ def main(online: bool = False, backend: str = "device", n_seeds: int = 1,
                    seeds={"seed": 0, "n_seeds": n_seeds})
     TRACER.export_jsonl(path.with_name(path.stem + ".trace.jsonl"))
     TRACER.export_chrome(path.with_name(path.stem + ".trace.chrome.json"))
+    if registry is not None:
+        registry.export_prometheus(
+            path.with_name(path.stem + ".metrics.prom"))
+        registry.export_json(path.with_name(path.stem + ".metrics.json"))
     if policies:
         s = payload["summary"]
         print(f"\nCoCaR vs best baseline ({s['best_baseline']}): "

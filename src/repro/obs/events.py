@@ -1,0 +1,126 @@
+"""Structured per-request event log for the serving data plane.
+
+``QueueSim`` (``repro.serving.simulator``) emits one event per request
+lifecycle phase:
+
+  ``arrival``  the request enters the system;
+  ``route``    the routing decision, with the full candidate set the
+               router scored (pod, exit, precision, projected finish,
+               deadline feasibility);
+  ``queue``    time spent waiting for the chosen pod's server to free;
+  ``stall``    additional time waiting for the submodel's bytes to load
+               (the plan's ``available_at`` — the paper's Eq. 37
+               loading-time constraint made visible per request);
+  ``service``  the generation itself;
+  ``finish`` | ``miss`` | ``drop``  exactly one terminal event per
+               arrival — served within the deadline, served late
+               (``admit_late``), or rejected at admission.
+
+The conservation law — every ``arrival`` matched by exactly one
+terminal event within its run — is checked by :meth:`EventLog
+.conservation` and asserted over the full BENCH_serving run.  Events
+are plain dicts (JSONL on disk) so the log is greppable and
+tool-agnostic; a log spans many simulator runs, disambiguated by the
+``run`` id handed out by :meth:`EventLog.new_run`.
+
+Like every ``repro.obs`` module this imports no jax and no ``repro``
+sibling; the tap is decision-inert — the simulator computes the same
+quantities with or without a log attached.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+#: Exactly one of these closes each arrival (conservation law).
+TERMINAL_KINDS = ("finish", "miss", "drop")
+#: Full phase vocabulary, in lifecycle order.
+PHASE_KINDS = ("arrival", "route", "queue", "stall",
+               "service") + TERMINAL_KINDS
+
+
+@dataclass
+class Event:
+    run: str
+    rid: int
+    kind: str
+    t: float
+    attrs: dict = field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return {"run": self.run, "rid": self.rid, "kind": self.kind,
+                "t": self.t, **self.attrs}
+
+
+class EventLog:
+    """Append-only event collector shared across simulator runs."""
+
+    def __init__(self):
+        self.events: list = []
+        self._run_no = 0
+        self.run_id = ""
+
+    def __len__(self):
+        return len(self.events)
+
+    def new_run(self, label: str = "") -> str:
+        """Open a new run scope; subsequent emits are stamped with the
+        returned id so request ids never collide across runs."""
+        self.run_id = f"{self._run_no:04d}:{label}"
+        self._run_no += 1
+        return self.run_id
+
+    def emit(self, kind: str, rid: int, t: float, **attrs):
+        if kind not in PHASE_KINDS:
+            raise ValueError(f"unknown event kind {kind!r}")
+        self.events.append(Event(self.run_id, int(rid), kind, float(t),
+                                 attrs))
+
+    def by_kind(self) -> dict:
+        out: dict = {}
+        for e in self.events:
+            out[e.kind] = out.get(e.kind, 0) + 1
+        return out
+
+    def conservation(self) -> dict:
+        """Every arrival appears exactly once as finish, miss, or drop
+        (within its run).  Returns the verdict plus the failure counts:
+        ``unterminated`` arrivals with no terminal, ``orphans``
+        terminals with no arrival, ``duplicates`` arrivals terminated
+        more than once."""
+        arrivals: dict = {}
+        terminals: dict = {}
+        for e in self.events:
+            key = (e.run, e.rid)
+            if e.kind == "arrival":
+                arrivals[key] = arrivals.get(key, 0) + 1
+            elif e.kind in TERMINAL_KINDS:
+                terminals[key] = terminals.get(key, 0) + 1
+        unterminated = sum(1 for k in arrivals if k not in terminals)
+        orphans = sum(1 for k in terminals if k not in arrivals)
+        duplicates = sum(1 for k, c in terminals.items()
+                         if c > 1 and k in arrivals)
+        return {"ok": not (unterminated or orphans or duplicates),
+                "n_arrivals": sum(arrivals.values()),
+                "n_terminals": sum(terminals.values()),
+                "unterminated": unterminated, "orphans": orphans,
+                "duplicates": duplicates,
+                "by_kind": self.by_kind()}
+
+    def export_jsonl(self, path):
+        with open(path, "w") as f:
+            for e in self.events:
+                f.write(json.dumps(e.to_dict()) + "\n")
+        return path
+
+    @classmethod
+    def read_jsonl(cls, path) -> "EventLog":
+        log = cls()
+        with open(path) as f:
+            for line in f:
+                d = json.loads(line)
+                log.events.append(Event(
+                    d.pop("run"), d.pop("rid"), d.pop("kind"),
+                    d.pop("t"), d))
+        log._run_no = len({e.run for e in log.events})
+        return log

@@ -192,7 +192,14 @@ def _run_chunks(spec: GridSpec, mesh, fn, args, B: int, stats: dict,
     inputs are laid out on the mesh with ``device_put`` before the call,
     and the compiled function donates them — the chunk's buffers die
     with its dispatch, so peak live memory tracks the chunk, not the
-    grid."""
+    grid.
+
+    With ``spec.diagnostics`` each chunk span additionally records
+    memory watermarks (``repro.obs.metrics.memory_snapshot``): live
+    device-array bytes after the chunk's outputs land on the host, plus
+    host RSS — and ``stats`` carries the grid-wide peaks.  The tap runs
+    strictly after the dispatch, so it cannot perturb results; when
+    diagnostics are off it is never called."""
     import jax
     from jax.experimental import enable_x64
 
@@ -241,6 +248,16 @@ def _run_chunks(spec: GridSpec, mesh, fn, args, B: int, stats: dict,
                         message="Some donated buffers were not usable")
                     out = fn(*chunk_args)
                 out = jax.tree.map(np.asarray, out)
+            if spec.diagnostics:
+                from repro.obs.metrics import memory_snapshot
+
+                mem = memory_snapshot()
+                sp.attrs.update(mem)
+                for k in ("device_live_bytes", "host_rss_kb",
+                          "host_maxrss_kb"):
+                    if k in mem:
+                        stats[f"peak_{k}"] = max(
+                            stats.get(f"peak_{k}", 0), mem[k])
         dt = sp.seconds
         outs.append(out)
         stats["chunks"] = stats.get("chunks", 0) + 1

@@ -157,7 +157,7 @@ def catalog_precisions(catalog, names) -> dict:
 def execute_plan(plan: ServingPlan, cfgs: dict, compute_flops: float,
                  arrivals: list, catalog=None, names=None,
                  with_load_delay: bool = True, admit_late: bool = False,
-                 seed: int = 0) -> dict:
+                 seed: int = 0, events=None, registry=None) -> dict:
     """Run one plan through the queue simulator.
 
     ``with_load_delay=True`` honours the plan's availability times (a
@@ -165,6 +165,12 @@ def execute_plan(plan: ServingPlan, cfgs: dict, compute_flops: float,
     ``False`` is the idealised instant-loading counterfactual the
     ranking-survival comparison is made against.  Returns the
     ``QueueSim.metrics()`` dict.
+
+    Telemetry taps (both default off, both decision-inert): ``events``
+    is an ``repro.obs.events.EventLog`` collecting the per-request
+    lifecycle; ``registry`` is an ``repro.obs.metrics.MetricsRegistry``
+    into which the finished run's latency/attribution histograms and
+    outcome counters are folded.
     """
     precisions = (catalog_precisions(catalog, names)
                   if catalog is not None and names is not None else None)
@@ -172,5 +178,11 @@ def execute_plan(plan: ServingPlan, cfgs: dict, compute_flops: float,
                    precisions=precisions, seed=seed,
                    available_at=plan.available_at if with_load_delay
                    else None,
-                   admit_late=admit_late)
-    return sim.run(arrivals)
+                   admit_late=admit_late, events=events,
+                   run_label=f"{plan.source}|delay={int(with_load_delay)}"
+                             f"|seed={seed}")
+    out = sim.run(arrivals)
+    if registry is not None:
+        from repro.obs import metrics as OM
+        OM.observe_queue_sim(registry, sim)
+    return out

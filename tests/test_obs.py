@@ -332,6 +332,65 @@ def test_report_gate_fails_without_data(tmp_path):
     assert rep.main([str(tmp_path), "--check-converged"]) == 1
 
 
+def _fake_serving(misses, att_frac=0.2):
+    att = {ph: {"sum": 1.0, "frac": att_frac, "p50": 0.01, "p95": 0.05,
+                "p99": 0.1} for ph in ("queue", "stall", "service")}
+    return {"offline": {"per_policy": {
+        "cocar": {"delayed": {"deadline_misses": misses},
+                  "attribution": att},
+        "lfu": {"delayed": {"deadline_misses": misses + 1.0},
+                "attribution": att}}}}
+
+
+def test_report_attribution_table(tmp_path, capsys):
+    rep = _report_mod()
+    (tmp_path / "BENCH_serving.json").write_text(
+        json.dumps(_fake_serving(2.0)))
+    rep.report_attribution(tmp_path)
+    out = capsys.readouterr().out
+    assert "== Latency attribution" in out
+    for needle in ("cocar", "lfu", "queue", "stall", "service", "20.0%"):
+        assert needle in out
+    # no serving payload -> section absent entirely
+    rep.report_attribution(tmp_path / "nowhere")
+    assert "attribution" not in capsys.readouterr().out
+
+
+def test_deadline_miss_gate(tmp_path, capsys):
+    """check_deadline_misses: None without a fresh payload, ok when at
+    or below baseline, counts regressing policies above it — and the
+    --check-converged gate turns a regression into exit 1."""
+    rep = _report_mod()
+    assert rep.check_deadline_misses(tmp_path) is None
+    (tmp_path / "BENCH_serving.json").write_text(
+        json.dumps(_fake_serving(3.0)))
+    base = _fake_serving(3.0)
+    assert rep.check_deadline_misses(tmp_path, baseline=base) == 0
+    better = _fake_serving(2.0)                  # fewer misses: fine
+    assert rep.check_deadline_misses(tmp_path, baseline=better) == 2
+    out = capsys.readouterr().out
+    assert "REGRESSION" in out
+    # a baseline missing one policy gates only on the shared ones
+    del base["offline"]["per_policy"]["lfu"]
+    assert rep.check_deadline_misses(tmp_path, baseline=base) == 0
+
+
+def test_check_converged_fails_on_miss_regression(tmp_path, capsys,
+                                                  monkeypatch):
+    rep = _report_mod()
+    _fake_artifacts(tmp_path, converged=True)
+    (tmp_path / "BENCH_serving.json").write_text(
+        json.dumps(_fake_serving(5.0)))
+    monkeypatch.setattr(rep, "_baseline_serving",
+                        lambda: _fake_serving(1.0))
+    assert rep.main([str(tmp_path), "--check-converged"]) == 1
+    assert "regressed on deadline misses" in capsys.readouterr().out
+    monkeypatch.setattr(rep, "_baseline_serving",
+                        lambda: _fake_serving(5.0))
+    assert rep.main([str(tmp_path), "--check-converged"]) == 0
+    assert "no deadline-miss regressions" in capsys.readouterr().out
+
+
 @pytest.mark.slow_compile
 def test_sweep_smoke_end_to_end(tmp_path, monkeypatch, capsys):
     """``sweep --smoke`` in-process: rows converge, artifacts land, and

@@ -122,6 +122,92 @@ def test_seed_determinism():
     assert (n3, m3) != (n1, m1)                  # different draw
 
 
+def test_latency_attribution_exact_with_stalls():
+    """queue_s + stall_s + service_s telescopes exactly to delivered
+    latency, and each component isolates its cause: a cold model stalls
+    (available_at), back-to-back arrivals queue."""
+    residency = {0: {"a": 2}}
+    sim0 = QueueSim(CFGS, residency, COMPUTE)
+    svc = sim0.service_time("a", 2, 64)
+    stall_until = 4.0 * svc
+    reqs = [SimRequest(rid=i, model="a", tokens=64, arrival=0.1 * i * svc,
+                       deadline=20.0 * svc + stall_until)
+            for i in range(3)]
+    sim = QueueSim(CFGS, residency, COMPUTE,
+                   available_at={(0, "a"): stall_until})
+    m = sim.run(reqs)
+    assert m["served"] == 3 and m["attribution_max_err"] == 0.0
+    r0, r1, r2 = sim.done
+    # first request: pure loading stall, no queueing
+    assert r0.queue_s == 0.0
+    assert r0.stall_s == stall_until - r0.arrival
+    assert abs(r0.service_s - svc) < 1e-12
+    # later requests queue behind r0 past the load, so no stall remains
+    assert r1.stall_s == 0.0 and r1.queue_s > 0.0
+    for r in sim.done:
+        assert r.queue_s + r.stall_s + r.service_s == r.latency
+    att = m["attribution"]
+    assert att["stall"]["sum"] > 0 and att["queue"]["sum"] > 0
+    assert abs(att["queue"]["frac"] + att["stall"]["frac"]
+               + att["service"]["frac"] - 1.0) < 1e-12
+
+
+def test_event_tap_decision_inert_and_conserved():
+    """Attaching an EventLog changes nothing — metrics and per-request
+    outcomes are identical — while the log satisfies the conservation
+    law and records the scored candidate set per route decision."""
+    from repro.obs import EventLog
+
+    residency = {0: {"a": 2, "b": 1}, 1: {"a": 1, "b": 2}}
+    arr = lambda: poisson_arrivals(80.0, 10.0, list(CFGS), [0.7, 0.3],  # noqa: E731
+                                   tokens=64, slo_s=2.0, seed=11)
+    plain = QueueSim(CFGS, residency, COMPUTE)
+    m_off = plain.run(arr())
+    log = EventLog()
+    tapped = QueueSim(CFGS, residency, COMPUTE, events=log,
+                      run_label="inert-check")
+    m_on = tapped.run(arr())
+    assert m_on == m_off
+    assert [(r.rid, r.pod, r.start, r.finish) for r in tapped.done] == \
+        [(r.rid, r.pod, r.start, r.finish) for r in plain.done]
+    c = log.conservation()
+    assert c["ok"] and c["n_arrivals"] == len(arr())
+    assert c["by_kind"].get("finish", 0) + c["by_kind"].get("miss", 0) \
+        == m_on["served"]
+    assert c["by_kind"].get("drop", 0) == m_on["dropped"]
+    routes = [e for e in log.events if e.kind == "route"]
+    assert len(routes) == c["n_arrivals"]
+    served = {r.rid for r in tapped.done}
+    for e in routes:
+        if e.attrs["chosen"] >= 0 and e.rid in served:
+            assert any(cand["pod"] == e.attrs["chosen"]
+                       for cand in e.attrs["candidates"])
+    # phase events carry durations that rebuild the attribution
+    for kind in ("queue", "stall", "service"):
+        evs = {e.rid: e.attrs["dur"] for e in log.events if e.kind == kind}
+        for r in tapped.done:
+            assert evs[r.rid] == getattr(r, f"{kind}_s")
+
+
+def test_metrics_empty_done_pinned():
+    """No completed request: every percentile/attribution key is an
+    explicit 0.0 and ``n`` pins the sample count, so downstream tables
+    never confuse 'nothing served' with 'served instantly'."""
+    sim = QueueSim(CFGS, {}, COMPUTE)
+    m = sim.run([SimRequest(rid=0, model="a", tokens=16, arrival=0.0,
+                            deadline=9.0)])
+    assert m["n"] == 0 and m["served"] == 0 and m["dropped"] == 1
+    assert m["p50_latency"] == m["p95_latency"] == m["p99_latency"] == 0.0
+    assert m["attribution_max_err"] == 0.0
+    for ph in ("queue", "stall", "service"):
+        assert m["attribution"][ph] == {"sum": 0.0, "frac": 0.0,
+                                        "p50": 0.0, "p95": 0.0,
+                                        "p99": 0.0}
+    # a truly empty run pins identically
+    m2 = QueueSim(CFGS, {}, COMPUTE).metrics()
+    assert m2["n"] == 0 and m2["p99_latency"] == 0.0
+
+
 def test_transfer_time_matches_pod_cache_byte_math():
     """simulator.transfer_time (what ServingPlan availability times are
     built from, via the measured catalog) == the seconds PodCache
